@@ -1,0 +1,47 @@
+"""Paper Table 5: expert-scaling analysis at 512 tokens (E = 8 -> 256,
+d_ffn adjusted for ~constant total compute).
+
+Reports CPU tokens/s for the dispatch pipeline plus the analytic v5e
+TFLOPS utilization — reproducing the paper's cliff at 64+ experts, where
+per-expert batches shrink below a tile and weight loading dominates."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import (emit, moe_flops, moe_weight_bytes, time_fn,
+                               HBM_BW, PEAK_FLOPS)
+from repro.configs.paper import EXPERT_SCALING
+from repro.core.dispatch import MoEDispatchConfig, moe_ffn
+
+SCALE = 8
+T = 512
+D_MODEL = 4096
+
+
+def main():
+    d = D_MODEL // SCALE
+    for E, k, d_ffn in EXPERT_SCALING:
+        f = max(d_ffn // SCALE, 8)
+        ks = jax.random.split(jax.random.key(E), 5)
+        wr = jax.random.normal(ks[0], (d, E)) * 0.1
+        wg = jax.random.normal(ks[1], (E, d, f)) * 0.1
+        wu = jax.random.normal(ks[2], (E, d, f)) * 0.1
+        wd = jax.random.normal(ks[3], (E, f, d)) * 0.1
+        x = jax.random.normal(ks[4], (T, d))
+        block_m = min(128, max(8, T * k // E))
+        cfg = MoEDispatchConfig(n_experts=E, top_k=k, block_m=block_m,
+                                impl="xla")
+        t = time_fn(jax.jit(lambda x: moe_ffn(x, wr, wg, wu, wd, cfg)[0]), x)
+        # analytic v5e TFLOPS at FULL dims: weight loading vs compute
+        fl = moe_flops(T, k, D_MODEL, d_ffn)
+        wb = moe_weight_bytes(E, D_MODEL, d_ffn)
+        acts = T * k * (2 * D_MODEL + 2 * d_ffn) * 2.0
+        t_proj = max(fl / PEAK_FLOPS, (wb + acts) / HBM_BW)
+        tflops = fl / t_proj / 1e12
+        emit(f"scaling/E{E}_k{k}_f{d_ffn}", t,
+             f"tok_per_s={T / t:.0f};v5e_TFLOPS={tflops:.1f};"
+             f"tok_per_expert={T * k / E:.1f}")
+
+
+if __name__ == "__main__":
+    main()

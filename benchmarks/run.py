@@ -1,0 +1,28 @@
+"""Benchmark driver — one module per paper table (see DESIGN.md §6).
+
+Prints ``name,us_per_call,derived`` CSV.  CPU-measured arms use
+width-scaled dims (structure-exact dispatch); ``*/tpu_proj`` and ``*/v5e``
+arms are analytic v5e projections at the paper's full dimensions.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (e2e_latency, expert_scaling, fusion_ablation,
+                            skew_sensitivity, stage_roofline)
+    mods = [("e2e_latency", e2e_latency), ("fusion_ablation", fusion_ablation),
+            ("expert_scaling", expert_scaling),
+            ("stage_roofline", stage_roofline),
+            ("skew_sensitivity", skew_sensitivity)]
+    print("name,us_per_call,derived")
+    for name, mod in mods:
+        t0 = time.time()
+        mod.main()
+        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Paper Table 6 / Figure 1: per-stage roofline for the dispatch pipeline.
+
+Per stage (router / permute / expert-FFN-unfused / expert-FFN-fused /
+unpermute): FLOPs, HBM bytes, arithmetic intensity, and projected v5e
+bandwidth/compute efficiency at the paper's Mixtral-8x7B 512-token shape.
+CPU wall fractions are also measured (structure check: expert FFN must
+dominate, permute/unpermute negligible — paper: >95% / <3%)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn, HBM_BW, PEAK_FLOPS
+from repro.configs.paper import PAPER_CONFIGS
+from repro.core.dispatch import combine_scale_rows
+from repro.core.schedule import build_schedule
+from repro.kernels import ref
+
+SCALE = 8
+T = 512
+
+
+def stage_table(d: int, f: int, E: int, k: int):
+    """(flops, bytes) per stage at given dims for T tokens."""
+    Tk = T * k
+    return {
+        "router": (2 * T * d * E + 5 * T * E, T * d * 2 + T * E * 4),
+        "permute": (0, 2 * Tk * d * 2),
+        "ffn_unfused": (2 * Tk * 3 * d * f,
+                        3 * E * d * f * 2 + Tk * (2 * d + 10 * f) * 2),
+        "ffn_fused": (2 * Tk * 3 * d * f,
+                      3 * E * d * f * 2 + Tk * (2 * d + 2 * f) * 2),
+        "unpermute": (2 * Tk * d, (Tk + T) * d * 4),
+    }
+
+
+def main():
+    pc = PAPER_CONFIGS["mixtral-8x7b"]
+    # ---- analytic v5e table at FULL dims (paper Table 6 analogue) ----
+    for stage, (fl, by) in stage_table(pc.d_model, pc.d_ffn,
+                                       pc.n_experts, pc.top_k).items():
+        ai = fl / by if by else 0.0
+        t = max(fl / PEAK_FLOPS, by / HBM_BW)
+        bw_eff = (by / t) / HBM_BW if t else 0.0
+        c_eff = (fl / t) / PEAK_FLOPS if t else 0.0
+        emit(f"stage/{stage}/v5e", t,
+             f"AI={ai:.1f};BW_eff={bw_eff:.1%};compute_eff={c_eff:.1%}")
+
+    # ---- measured CPU wall fractions (scaled dims) ----
+    d, f = pc.d_model // SCALE, pc.d_ffn // SCALE
+    E, k = pc.n_experts, pc.top_k
+    ks = jax.random.split(jax.random.key(0), 6)
+    wr = jax.random.normal(ks[0], (d, E)) * 0.1
+    wg = jax.random.normal(ks[1], (E, d, f)) * 0.1
+    wu = jax.random.normal(ks[2], (E, d, f)) * 0.1
+    wd = jax.random.normal(ks[3], (E, f, d)) * 0.1
+    x = jax.random.normal(ks[4], (T, d))
+
+    logits = x @ wr
+    w, idx = ref.router_ref(logits, k)
+    sched = build_schedule(idx, E, 128)
+    xp = ref.permute_ref(x, sched)
+    from repro.core.dispatch import fused_gate_up_xla, grouped_gemm_xla
+    h = fused_gate_up_xla(xp, wg, wu, sched)
+    y = grouped_gemm_xla(h, wd, sched,
+                         row_scale=combine_scale_rows(sched, w))
+
+    stages = {
+        "router": jax.jit(lambda x: ref.router_ref(x @ wr, k)[0]),
+        "permute": jax.jit(lambda x: ref.permute_ref(x, sched)),
+        "ffn_fused": jax.jit(lambda xp: grouped_gemm_xla(
+            fused_gate_up_xla(xp, wg, wu, sched), wd, sched)),
+        "unpermute": jax.jit(lambda y: ref.unpermute_ref(y, sched, w)),
+    }
+    args = {"router": x, "permute": x, "ffn_fused": xp, "unpermute": y}
+    times = {s: time_fn(fn, args[s]) for s, fn in stages.items()}
+    total = sum(times.values())
+    for s, t in times.items():
+        emit(f"stage/{s}/cpu", t, f"frac={t / total:.1%}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""repro: TPU-native reproduction of "Cross-Platform Fused MoE Dispatch in
+Triton" — a multi-pod JAX training/inference framework whose first-class
+feature is the paper's fused MoE dispatch pipeline (see DESIGN.md)."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,229 @@
+"""Assemble EXPERIMENTS.md from results/dryrun + results/perf JSONs.
+
+    PYTHONPATH=src python -m repro.analysis.report > EXPERIMENTS.md
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.analysis.roofline import analyze_cell, load_results, markdown_table
+
+ROOT = pathlib.Path(__file__).resolve().parents[3]
+
+
+def dryrun_table(recs):
+    rows = ["| arch | shape | mesh | status | compile s | arg GB/dev | "
+            "temp GB/dev | HLO GFLOP/dev | coll GB/dev (corrected) |",
+            "|" + "---|" * 9]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if r["status"] == "skip":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"SKIP ({r['reason']}) | | | | | |")
+            continue
+        m, c = r["memory"], r.get("cost", {})
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+            f"{r['compile_s']} | {m['argument_bytes'] / 1e9:.2f} | "
+            f"{m['temp_bytes'] / 1e9:.2f} | "
+            f"{(c.get('flops') or 0) / 1e9:.0f} | "
+            f"{r['collectives']['total_bytes'] / 1e9:.1f} |")
+    return "\n".join(rows)
+
+
+def perf_rows(paths, baseline_path, label):
+    base = json.loads((ROOT / baseline_path).read_text())
+    bc = base["collectives"]["total_bytes"]
+    bt = base["memory"]["temp_bytes"]
+    out = [f"**{label}** — baseline: collective "
+           f"{bc / 1e9:.1f} GB/dev/step ({bc / 50e9:.2f} s), temp "
+           f"{bt / 1e9:.1f} GB/dev", "",
+           "| variant | collective GB | Δ coll | temp GB | Δ temp | verdict |",
+           "|---|---|---|---|---|---|"]
+    for p, verdict in paths:
+        d = json.loads((ROOT / p).read_text())
+        c = d["collectives"]["total_bytes"]
+        t = d["memory"]["temp_bytes"]
+        out.append(f"| {d.get('variant', 'baseline')} | {c / 1e9:.1f} | "
+                   f"{c / bc:.2f}x | {t / 1e9:.1f} | {t / bt:.2f}x | "
+                   f"{verdict} |")
+    return "\n".join(out)
+
+
+def main():
+    dr = load_results(str(ROOT / "results" / "dryrun"))
+    ok = [r for r in dr if r.get("status") == "ok"]
+    skips = [r for r in dr if r.get("status") == "skip"]
+    rl = [analyze_cell(r) for r in ok]
+    rl1 = [r for r in rl if r.mesh == "16x16"]
+
+    frac = sorted(rl1, key=lambda r: -r.roofline_fraction())
+    print(EXPERIMENTS_TEMPLATE.format(
+        n_ok=len(ok), n_skip=len(skips),
+        dryrun=dryrun_table(dr),
+        roofline=markdown_table(sorted(
+            rl1, key=lambda r: (r.arch, r.shape))),
+        roofline_mp=markdown_table(sorted(
+            [r for r in rl if r.mesh == "2x16x16"],
+            key=lambda r: (r.arch, r.shape))),
+        best="\n".join(f"  * {r.arch}/{r.shape}: "
+                       f"{r.roofline_fraction():.1%} ({r.dominant}-bound)"
+                       for r in frac[:5]),
+        perf_qwen=perf_rows([
+            ("results/perf/qwen2-7b.train_4k.16x16.accum1.json",
+             "CONFIRMED (3.6x; predicted ~4x — grad reduce-scatter is "
+             "accum-invariant)"),
+            ("results/perf/qwen2-7b.train_4k.16x16.accum4pin.json",
+             "REFUTED (no change: GSPMD had already sharded the carry)"),
+            ("results/perf/qwen2-7b.train_4k.16x16.accum1nokvc.json",
+             "REFUTED (+5%: GSPMD re-derives a worse all-to-all pattern)"),
+            ("results/perf/qwen2-7b.train_4k.16x16.accum1-don.json",
+             "kept (donation aliases 0.3 GB; correctness practice)"),
+        ], "results/dryrun/qwen2-7b.train_4k.16x16.json",
+            "Cell 1: qwen2-7b x train_4k (most collective-bound)"),
+        perf_ds=perf_rows([
+            ("results/perf/deepseek-v2-236b.train_4k.16x16.cf125.json",
+             "CONFIRMED (a2a -43%, temp -23%)"),
+            ("results/perf/deepseek-v2-236b.train_4k.16x16.accum1.json",
+             "REFUTED for this arch (coll -23% but temp +59%, far over HBM)"),
+            ("results/perf/deepseek-v2-236b.train_4k.16x16.cf125-pin.json",
+             "REFUTED (carry already sharded)"),
+            ("results/perf/deepseek-v2-236b.train_4k.16x16.cf125-bf16attn.json",
+             "kept (strictly less traffic; peak unchanged on CPU model)"),
+            ("results/perf/deepseek-v2-236b.train_4k.16x16.cf125-a4.json",
+             "memory/collective tradeoff point"),
+            ("results/perf/deepseek-v2-236b.train_4k.16x16.cf125-a8.json",
+             "memory/collective tradeoff point"),
+            ("results/perf/deepseek-v2-236b.train_4k.2x16x16.cf125-a8-mp.json",
+             "2-pod: temp -13% further"),
+        ], "results/dryrun/deepseek-v2-236b.train_4k.16x16.json",
+            "Cell 2: deepseek-v2-236b x train_4k (paper-representative)"),
+        perf_dsd=perf_rows([
+            ("results/perf/deepseek-v2-236b.decode_32k.16x16.servetp.json",
+             "partial (-5%: dense gathers were the small term)"),
+            ("results/perf/deepseek-v2-236b.decode_32k.16x16.fsdp-int8.json",
+             "CONFIRMED (3.4x: halved logical bytes + avoids f32-gather)"),
+            ("results/perf/deepseek-v2-236b.decode_32k.16x16.servetp-int8.json",
+             "CONFIRMED (4.1x combined — the optimized serving config)"),
+        ], "results/dryrun/deepseek-v2-236b.decode_32k.16x16.json",
+            "Cell 3: deepseek-v2-236b x decode_32k (worst roofline frac)"),
+    ))
+
+
+EXPERIMENTS_TEMPLATE = """# EXPERIMENTS
+
+TPU-native reproduction of *Cross-Platform Fused MoE Dispatch in Triton*
+(TritonMoE). Hardware model: TPU v5e — 197 TFLOP/s bf16/chip, 819 GB/s HBM,
+~50 GB/s/link ICI. Meshes: 16x16 (1 pod, 256 chips) and 2x16x16 (2 pods,
+512 chips). This container is CPU-only: all full-scale numbers come from
+``lower().compile()`` artifacts (dry-run), kernels are validated in
+interpret mode, CPU benchmarks run width-scaled shapes.
+
+## §Paper-claims validation (benchmarks/, CPU + analytic)
+
+| paper claim | our result | artifact |
+|---|---|---|
+| grouped GEMM >> loop-over-experts (Table 4: 15.4x) | 2.5x CPU-measured at 1/8 width, 512 tok (CPU has no launch-overhead cliff; structural win reproduced) | fusion_ablation |
+| fused gate+up over unfused: 1.15x (Table 4) | 1.13x CPU-measured; 1.08x analytic v5e at full Mixtral dims | fusion_ablation |
+| dispatch faster than dense at small batch (Tables 2-3) | 1.19-10.4x vs dense oracle across configs/batches | e2e_latency |
+| expert-scaling cliff at 64+ experts (Table 5: 111->8 TFLOPS) | v5e-analytic 102->13 TFLOPS (E=8->256); CPU tok/s mirrors | expert_scaling |
+| expert FFN dominates pipeline (Table 6: >95%) | 99.3% CPU-measured; permute+unpermute <1% | stage_roofline |
+| fused kernel ~43% BW / ~35% compute eff (Table 6) | analytic v5e: 52% compute eff fused vs 48% unfused | stage_roofline |
+| skew hurts fixed-BLOCK_M at 64+ experts (§4.7) | tile-padding waste up to 1.75x; EP drop\\@cf1.25 43.9%->74.6% (qwen2-moe, zipf 1.2->2.0) | skew_sensitivity |
+
+## §Dry-run
+
+{n_ok} cells compiled OK across both meshes; {n_skip} architectural skips
+(encoder-only decode, quadratic-attention 500k) — see DESIGN.md §4.
+Per-device numbers from ``memory_analysis()`` / ``cost_analysis()`` of the
+SPMD module; collective GB are link-byte estimates corrected for scan trip
+counts (methodology below).
+
+{dryrun}
+
+## §Roofline
+
+Methodology: ``cost_analysis()`` counts while-loop bodies ONCE (verified:
+a 10-step scan reports 1x body FLOPs), so raw HLO numbers are lower bounds.
+The three terms below use (i) matmul-exact analytic FLOPs (validated
+against an unrolled compile: tests/test_roofline.py), (ii) analytic
+dominant-flow HBM bytes, (iii) HLO-parsed collective link bytes x static
+trip counts (layer-scan depth x grad-accum steps, scope-classified via
+``op_name`` metadata). ``MODEL/HLO`` = 6*N_active*D / executed FLOPs —
+exposes remat (4/3x), top-k expansion, and capacity-padding waste. Known
+CPU-lowering artifact: XLA:CPU upcasts bf16 dots to f32, so some weight
+all-gathers appear at 2x their TPU-native bytes; the collective terms are
+therefore conservative upper bounds (quantified in §Perf cell 3, where
+int8 gathers dodge the artifact entirely).
+
+### Single-pod (16x16, 256 chips) — BASELINE, all runnable cells
+
+{roofline}
+
+### Multi-pod (2x16x16, 512 chips)
+
+{roofline_mp}
+
+Best roofline fractions (single-pod):
+{best}
+
+Reading: TRAIN cells are collective-bound under the baseline FSDP^2+CP
+policy (per-microbatch weight gathers dominate); prefill cells approach
+25-42% of roofline on dense archs; decode cells are weight-gather-bound
+(the paper's own DeepSeek-V3 finding, §Discussion). long_500k on rwkv6 is
+effectively idle hardware (B=1) — the arch runs it, the economics don't.
+
+## §Perf — hypothesis -> change -> measure log
+
+The paper-faithful baseline (fused gate+up dispatch, fold-combine, EP
+capacity 2.0, FSDP^2+CP, accum per specs.ACCUM) is the FLOOR recorded
+above; every variant below is a separately-lowered artifact in
+results/perf/. Stop rule: three consecutive <5% changes.
+
+{perf_qwen}
+
+Lesson: grad-accum microbatching multiplies weight-gather traffic; at 1M
+tokens/step the activation memory (12.3 GB/dev) affords accum=1, paying
+3.6x less ICI. Collective term 12.5 s -> 3.5 s/step; roofline fraction
+7.05% -> 25.4% (the single largest measured win in this repo).
+
+{perf_ds}
+
+Lessons: (1) EP capacity factor is the paper's fixed-BLOCK_M tradeoff in
+distributed form — 1.25 costs zero drops under uniform routing (benchmarks
+skew_sensitivity quantifies the skew risk) and cuts a2a 43%. (2) For a
+236B MoE, memory and collectives PULL OPPOSITE on accum: the table maps
+the frontier; 2-pod + accum 8 + cf1.25 is the best measured point
+(temp 32.3 GB on the conservative CPU buffer model). (3) Three
+consecutive sub-5% iterations (pin, bf16attn, donation) hit the stop rule.
+
+{perf_dsd}
+
+Lesson (beyond-paper): MoE decode is expert-weight-gather bound exactly as
+the paper's §Discussion predicts for DeepSeek-class models; weight-only
+int8 experts + TP-resident dense weights cut the dominant term 4.1x
+(1.11 s -> 0.27 s/step, int8 dequant validated to 2% rel err in
+tests/test_quant.py). This is the serving configuration we'd deploy.
+
+**Extended (beyond the three assigned cells) — prefill layout probe.**
+Hypothesis: prefill is weight-gather bound like decode, so serve-TP should
+flip it compute-bound. Measured: qwen2-7b prefill 35.1 -> 33.6 GB (-4%),
+gemma2-9b 77.5 -> 76.9 GB (-1%) — REFUTED: prefill's collective term is
+CP's per-layer KV all-gather (small-GQA archs replicate K/V across the
+sequence-sharded ranks), not weight movement. The fix on real hardware is
+ring attention (collective-permute KV chunks overlapped with the score
+GEMMs — bytes unchanged but fully hidden under compute in the max-term
+roofline); left as the top item for a follow-up iteration.
+
+## §Perf — paper-faithful vs beyond-paper summary
+
+| cell | paper-faithful baseline | beyond-paper optimized | gain | roofline frac |
+|---|---|---|---|---|
+| qwen2-7b train_4k | coll 625.9 GB/step (12.5 s) | 173.9 GB (3.5 s) via accum=1 + donation | 3.6x | 7.05% -> 25.4% |
+| deepseek-v2 train_4k | coll 2649.7 GB (53.0 s), temp 86.1 GB | 2371.3 GB (47.4 s), temp 65.8 GB via cf1.25+bf16-attn; frontier to temp 32.3 GB at 2-pod/accum8 | 1.12x coll / 1.31-2.7x mem | 4.91% -> 5.48% |
+| deepseek-v2 decode_32k | coll 55.5 GB (1.11 s) | 13.5 GB (0.27 s) via serve-TP + int8 experts | 4.1x | 0.01% -> 0.04% (gather-bound by nature at B=128; see paper §Discussion) |
+"""
+
+
+if __name__ == "__main__":
+    main()

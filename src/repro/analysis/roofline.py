@@ -1,0 +1,157 @@
+"""Roofline assembly: three terms per (arch x shape x mesh) cell.
+
+    compute term    = FLOPs / (chips x 197e12 bf16 FLOP/s)
+    memory term     = HBM bytes / (chips x 819e9 B/s)
+    collective term = link bytes / (chips x 50e9 B/s per ICI link)
+
+Sources (documented in EXPERIMENTS.md §Roofline methodology):
+  * FLOPs / HBM bytes: ``compiled.cost_analysis()`` raw values are reported
+    as-is ("hlo_raw"), but XLA counts while-loop bodies ONCE, so the primary
+    numbers come from the analytic model in analysis/flops.py (matmul-exact;
+    validated against an unrolled compile in tests/test_roofline.py).
+  * collective bytes: parsed from the compiled HLO with ring-collective
+    link-byte formulas and multiplied by the statically-known layer-scan /
+    grad-accum trip counts (analysis/hlo.py).
+
+The dominant term is the bottleneck; MODEL_FLOPS / dispatch-FLOPs exposes
+remat + top-k expansion + capacity-padding waste.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from dataclasses import asdict, dataclass
+from typing import Dict, Optional
+
+from repro.analysis.flops import cell_cost
+from repro.configs import SHAPE_BY_NAME, get_config
+
+PEAK_FLOPS = 197e12          # bf16 / chip (TPU v5e)
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link
+
+HBM_PER_CHIP = 16e9          # v5e capacity, for fit checks
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    dispatch_flops: float
+    flops_ratio: float          # MODEL / dispatched (useful fraction)
+    hlo_raw_flops: Optional[float]
+    hlo_raw_bytes: Optional[float]
+    collective_bytes: float
+    temp_bytes_per_dev: Optional[float]
+    fits_hbm: Optional[bool]
+    note: str = ""
+
+    def step_time_s(self) -> float:
+        """Perfect-overlap bound: max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def roofline_fraction(self) -> float:
+        """Useful-compute fraction of the step-time bound (an MFU bound)."""
+        ideal = self.model_flops / (self.chips * PEAK_FLOPS)
+        t = self.step_time_s()
+        return ideal / t if t > 0 else 0.0
+
+
+_NOTES = {
+    "compute": "compute-bound: raise useful-FLOP fraction (cut remat/"
+               "capacity waste) or grow per-chip arithmetic intensity",
+    "memory": "HBM-bound: cut weight/cache re-reads (fuse gate+up, batch "
+              "more tokens per weight load, quantize cache)",
+    "collective": "ICI-bound: shrink per-layer gathers (gather bf16 not "
+                  "fp32, overlap a2a with expert GEMMs, widen DP axis)",
+}
+
+
+def analyze_cell(record: Dict, *, capacity_factor: float = 2.0) -> Roofline:
+    cfg = get_config(record["arch"])
+    shape = SHAPE_BY_NAME[record["shape"]]
+    chips = 512 if record["mesh"] == "2x16x16" else 256
+    accum = (record.get("meta") or {}).get("accum", 1)
+    cost = cell_cost(cfg, shape, chips=chips, accum=accum,
+                     capacity_factor=capacity_factor,
+                     remat=(shape.kind == "train"))
+
+    coll_bytes = (record.get("collectives") or {}).get("total_bytes", 0.0)
+    compute_s = cost.dispatch_flops / (chips * PEAK_FLOPS)
+    memory_s = cost.hbm_bytes / HBM_BW             # hbm_bytes is per-device
+    collective_s = coll_bytes / ICI_BW             # per-device link bytes
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    temp = (record.get("memory") or {}).get("temp_bytes")
+    arg = (record.get("memory") or {}).get("argument_bytes") or 0
+    fits = None
+    if temp is not None:
+        fits = (temp + arg) <= HBM_PER_CHIP
+
+    return Roofline(
+        arch=record["arch"], shape=record["shape"], mesh=record["mesh"],
+        chips=chips,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant,
+        model_flops=cost.model_flops,
+        dispatch_flops=cost.dispatch_flops,
+        flops_ratio=cost.model_flops / max(cost.dispatch_flops, 1.0),
+        hlo_raw_flops=(record.get("cost") or {}).get("flops"),
+        hlo_raw_bytes=(record.get("cost") or {}).get("bytes accessed"),
+        collective_bytes=coll_bytes,
+        temp_bytes_per_dev=temp,
+        fits_hbm=fits,
+        note=_NOTES[dominant],
+    )
+
+
+def load_results(result_dir: str):
+    out = []
+    for p in sorted(pathlib.Path(result_dir).glob("*.json")):
+        try:
+            out.append(json.loads(p.read_text()))
+        except Exception:
+            pass
+    return out
+
+
+def markdown_table(rooflines, *, include_note: bool = False) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "bottleneck | MODEL/HLO | roofline frac | fits HBM |")
+    sep = "|" + "---|" * 10
+    rows = [hdr, sep]
+    for r in rooflines:
+        rows.append(
+            f"| {r.arch} | {r.shape} | {r.mesh} | {r.compute_s:.3e} | "
+            f"{r.memory_s:.3e} | {r.collective_s:.3e} | {r.dominant} | "
+            f"{r.flops_ratio:.2f} | {r.roofline_fraction():.2%} | "
+            f"{'Y' if r.fits_hbm else 'N' if r.fits_hbm is not None else '?'} |")
+    return "\n".join(rows)
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="results/dryrun")
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args()
+    recs = [r for r in load_results(args.results) if r.get("status") == "ok"]
+    if args.mesh:
+        recs = [r for r in recs if r["mesh"] == args.mesh]
+    rl = [analyze_cell(r) for r in recs]
+    print(markdown_table(rl))
+    for r in rl:
+        print(f"  {r.arch}/{r.shape}/{r.mesh}: {r.dominant} -> {r.note}")
+
+
+if __name__ == "__main__":
+    main()

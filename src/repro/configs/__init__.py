@@ -1,0 +1,33 @@
+"""Config registry: ``get_config("<arch-id>")`` for every assigned architecture."""
+from repro.configs.base import (MLAConfig, ModelConfig, MoEConfig, RWKVConfig,
+                                ShapeConfig, SHAPES, SHAPE_BY_NAME, SSMConfig,
+                                cell_is_runnable, reduced)
+
+from repro.configs import (deepseek_v2_236b, gemma2_9b, hubert_xlarge,
+                           llama_3_2_vision_11b, moonshot_v1_16b_a3b,
+                           qwen2_7b, rwkv6_1_6b, smollm_360m, starcoder2_3b,
+                           zamba2_7b)
+from repro.configs.paper import EXPERT_SCALING, PAPER_CONFIGS, TOKEN_SWEEP, PaperMoE
+
+_MODULES = (
+    hubert_xlarge, deepseek_v2_236b, moonshot_v1_16b_a3b, qwen2_7b,
+    smollm_360m, gemma2_9b, starcoder2_3b, rwkv6_1_6b,
+    llama_3_2_vision_11b, zamba2_7b,
+)
+
+REGISTRY = {m.CONFIG.name: m.CONFIG for m in _MODULES}
+ARCH_NAMES = tuple(REGISTRY)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "MLAConfig", "SSMConfig", "RWKVConfig",
+    "ShapeConfig", "SHAPES", "SHAPE_BY_NAME", "cell_is_runnable", "reduced",
+    "REGISTRY", "ARCH_NAMES", "get_config",
+    "PAPER_CONFIGS", "EXPERT_SCALING", "TOKEN_SWEEP", "PaperMoE",
+]

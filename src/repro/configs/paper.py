@@ -1,0 +1,39 @@
+"""The paper's four benchmark MoE configurations (Table 1).
+
+These parameterize the dispatch-level benchmarks (benchmarks/*.py) exactly as
+the paper benchmarks its kernels: a single MoE layer, not a full model.
+"""
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+
+@dataclass(frozen=True)
+class PaperMoE:
+    name: str
+    n_experts: int      # E
+    top_k: int          # k
+    d_model: int        # d
+    d_ffn: int          # d_ffn
+    gating: str = "softmax"
+
+
+PAPER_CONFIGS: Dict[str, PaperMoE] = {
+    "mixtral-8x7b": PaperMoE("mixtral-8x7b", 8, 2, 4096, 14336),
+    "mixtral-8x22b": PaperMoE("mixtral-8x22b", 8, 2, 6144, 16384),
+    "deepseek-v3": PaperMoE("deepseek-v3", 256, 8, 7168, 2048, gating="sigmoid"),
+    "qwen2-moe-57b": PaperMoE("qwen2-moe-57b", 64, 4, 3584, 2560),
+}
+
+# Paper Table 5: expert-scaling sweep (d_ffn adjusted for ~constant compute).
+EXPERT_SCALING: Tuple[Tuple[int, int, int], ...] = (
+    # (E, top_k, d_ffn)
+    (8, 2, 14336),
+    (16, 2, 8192),
+    (32, 4, 4096),
+    (64, 4, 2560),
+    (128, 8, 2048),
+    (256, 8, 2048),
+)
+
+# Token-count sweep used by paper Tables 2-3.
+TOKEN_SWEEP: Tuple[int, ...] = (32, 128, 512, 2048)

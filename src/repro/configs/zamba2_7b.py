@@ -1,0 +1,27 @@
+"""zamba2-7b — hybrid Mamba2 backbone + shared attention blocks.
+
+[arXiv:2411.15242; unverified]  81L d_model=3584 32H (kv=32) d_ff=14336
+ssm_state=64 vocab=32000.  The stack is Mamba2 mixer layers with a SHARED
+attention+MLP block applied every ``attn_every`` layers (2 unique shared blocks
+used round-robin — weight sharing as in the paper; the concat-embedding input
+projection of the original is simplified to a residual application, noted in
+DESIGN.md).  Hybrid: runs the long_500k decode shape (Mamba state is O(1);
+the shared-attn KV cache is sequence-sharded, see distributed/).
+"""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    n_layers=81,
+    d_model=3584,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=14336,
+    vocab_size=32_000,
+    head_dim=112,
+    rope_theta=10_000.0,
+    ssm=SSMConfig(d_state=64, head_dim=64, expand=2, conv_kernel=4, chunk=128),
+    attn_every=6,
+    n_shared_attn_blocks=2,
+)

@@ -1,0 +1,254 @@
+"""Expert-parallel MoE dispatch over a mesh axis (beyond-paper).
+
+The paper targets single-GPU dispatch and defers multi-device expert
+parallelism (its Limitation 6).  Here the paper's pipeline becomes the
+*per-device inner loop* of a GShard-style EP layer:
+
+``token_layout="sharded"`` (train / prefill — tokens are sequence-sharded
+over the EP axis):
+  local router -> capacity-bucketed send buffers -> all_to_all -> local
+  block-scheduled grouped FFN (static, tile-aligned layout: slot s of rank r
+  belongs to local expert s // C — no dynamic schedule needed at all) ->
+  all_to_all back -> weighted combine on the source rank.
+
+``token_layout="replicated"`` (decode — every EP rank sees the same tokens):
+  each rank runs the dispatch pipeline restricted to the experts it owns
+  (non-owned assignments routed to an inactive sentinel expert whose blocks
+  are skipped), then a single psum over the EP axis combines partial outputs
+  — the collective is O(B*d) instead of an all_to_all of expert buffers.
+
+Tokens overflowing an expert's capacity bucket are dropped (GShard
+semantics); capacity_factor controls headroom and tests cover the
+drop/no-drop regimes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.dispatch import (MoEDispatchConfig, _aux_losses,
+                                 fused_gate_up_xla, grouped_gemm_xla, route)
+from repro.core.schedule import BlockSchedule, build_schedule, round_up
+from repro.kernels import ops, ref
+
+
+def _static_schedule(n_rows: int, n_local_experts: int, block_m: int,
+                     rows_per_expert: int) -> BlockSchedule:
+    """Schedule for the fixed EP receive layout: rows grouped by local
+    expert with a static group size (rows_per_expert each)."""
+    nb = n_rows // block_m
+    block_expert = (jnp.arange(nb, dtype=jnp.int32)
+                    // (rows_per_expert // block_m))
+    return BlockSchedule(
+        counts=jnp.full((n_local_experts,), rows_per_expert, jnp.int32),
+        group_offsets=jnp.arange(n_local_experts + 1, dtype=jnp.int32)
+        * rows_per_expert,
+        src_tok=jnp.zeros((n_rows,), jnp.int32),
+        pos=jnp.zeros((1, 1), jnp.int32),
+        block_expert=block_expert,
+        block_active=jnp.ones((nb,), jnp.int32),
+        capacity=n_rows, block_m=block_m)
+
+
+def _grouped_ffn(x, params, sched: BlockSchedule, cfg: MoEDispatchConfig,
+                 row_scale=None):
+    """The paper's grouped compute (fused gate+up, down) on a schedule."""
+    if cfg.impl == "pallas":
+        if cfg.fuse_gate_up:
+            h = ops.fused_gate_up(x, params["w_gate"], params["w_up"], sched,
+                                  interpret=cfg.interpret)
+        else:
+            g = ops.grouped_gemm(x, params["w_gate"], sched,
+                                 interpret=cfg.interpret)
+            u = ops.grouped_gemm(x, params["w_up"], sched,
+                                 interpret=cfg.interpret)
+            gf = g.astype(jnp.float32)
+            h = ((gf * jax.nn.sigmoid(gf)) * u.astype(jnp.float32)
+                 ).astype(x.dtype)
+        return ops.grouped_gemm(h, params["w_down"], sched,
+                                row_scale=row_scale, interpret=cfg.interpret)
+    if cfg.fuse_gate_up:
+        h = fused_gate_up_xla(x, params["w_gate"], params["w_up"], sched)
+    else:
+        g = grouped_gemm_xla(x, params["w_gate"], sched)
+        u = grouped_gemm_xla(x, params["w_up"], sched)
+        gf = g.astype(jnp.float32)
+        h = ((gf * jax.nn.sigmoid(gf)) * u.astype(jnp.float32)).astype(x.dtype)
+    return grouped_gemm_xla(h, params["w_down"], sched, row_scale=row_scale)
+
+
+# ----------------------------------------------------------------------
+def _ep_sharded_local(params, x_loc, cfg: MoEDispatchConfig, axis: str,
+                      capacity_factor: float):
+    """Per-rank body for token_layout='sharded'. x_loc: (T_local, d)."""
+    ep = jax.lax.axis_size(axis)
+    E, k, M = cfg.n_experts, cfg.top_k, cfg.block_m
+    E_local = E // ep
+    Tl, d = x_loc.shape
+
+    weights, indices, logits = route(x_loc, params["router"], cfg)
+    aux = _aux_losses(logits, indices, cfg)
+    aux = {k_: jax.lax.pmean(v, axis) for k_, v in aux.items()}
+
+    # capacity per (expert) bucket, tile-aligned so the receive layout is
+    # statically tile-aligned for the grouped GEMM
+    cap = round_up(max(1, int(Tl * k * capacity_factor / E)), M)
+
+    flat = indices.reshape(-1)                               # (Tl*k,)
+    sort_idx = jnp.argsort(flat, stable=True)
+    counts = jnp.bincount(flat, length=E)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(counts)]).astype(jnp.int32)
+    ranks = jnp.arange(Tl * k, dtype=jnp.int32)
+    slot_sorted = ranks - starts[flat[sort_idx]]             # rank within expert
+    slot = jnp.zeros((Tl * k,), jnp.int32).at[sort_idx].set(slot_sorted)
+    keep = slot < cap
+    dest = flat * cap + slot                                 # row in send buf
+
+    send = jnp.zeros((E * cap, d), x_loc.dtype)
+    src_rows = jnp.repeat(jnp.arange(Tl), k)
+    send = send.at[jnp.where(keep, dest, E * cap)].set(
+        x_loc[src_rows], mode="drop")
+
+    # (E*cap, d) -> (ep, E_local*cap, d) -> a2a -> rows from every peer
+    send = send.reshape(ep, E_local * cap, d)
+    recv = jax.lax.all_to_all(send, axis, split_axis=0, concat_axis=0,
+                              tiled=False)
+    # regroup: (ep, E_local, cap, d) -> (E_local, ep*cap, d): contiguous
+    # per local expert, group size ep*cap (tile-aligned since cap % M == 0)
+    recv = recv.reshape(ep, E_local, cap, d).transpose(1, 0, 2, 3) \
+        .reshape(E_local * ep * cap, d)
+
+    from repro.core.quant import effective_expert_weights
+    sched = _static_schedule(E_local * ep * cap, E_local, M, ep * cap)
+    local_w = effective_expert_weights(params, x_loc.dtype)
+    y = _grouped_ffn(recv, local_w, sched, cfg)
+
+    # inverse path
+    y = y.reshape(E_local, ep, cap, d).transpose(1, 0, 2, 3) \
+        .reshape(ep, E_local * cap, d)
+    y = jax.lax.all_to_all(y, axis, split_axis=0, concat_axis=0, tiled=False)
+    y = y.reshape(E * cap, d)
+
+    gathered = y[jnp.minimum(dest, E * cap - 1)]             # (Tl*k, d)
+    w_eff = jnp.where(keep, weights.reshape(-1), 0.0)
+    out = jnp.sum(gathered.reshape(Tl, k, d).astype(jnp.float32)
+                  * w_eff.reshape(Tl, k, 1), axis=1)
+    return out.astype(x_loc.dtype), aux
+
+
+def _ep_replicated_local(params, x_loc, cfg: MoEDispatchConfig, axis: str):
+    """Per-rank body for token_layout='replicated' (decode)."""
+    ep = jax.lax.axis_size(axis)
+    E, M = cfg.n_experts, cfg.block_m
+    E_local = E // ep
+    r = jax.lax.axis_index(axis)
+    base = r * E_local
+
+    weights, indices, logits = route(x_loc, params["router"], cfg)
+    aux = _aux_losses(logits, indices, cfg)
+    aux = {k_: jax.lax.pmean(v, axis) for k_, v in aux.items()}
+
+    mine = (indices >= base) & (indices < base + E_local)
+    # non-owned assignments -> sentinel expert E_local (blocks deactivated)
+    idx_local = jnp.where(mine, indices - base, E_local)
+    w_masked = jnp.where(mine, weights, 0.0)
+
+    sched = build_schedule(idx_local, E_local + 1, M)
+    # deactivate sentinel blocks so Pallas skips them on TPU
+    sched = sched._replace(
+        block_active=sched.block_active
+        * (sched.block_expert < E_local).astype(jnp.int32),
+        block_expert=jnp.minimum(sched.block_expert, E_local - 1))
+
+    xp = ref.permute_ref(x_loc, sched) if cfg.impl != "pallas" \
+        else ops.permute(x_loc, sched, interpret=cfg.interpret)
+    from repro.core.dispatch import combine_scale_rows
+    from repro.core.quant import effective_expert_weights
+    scale = combine_scale_rows(sched, w_masked)
+    local_w = effective_expert_weights(params, x_loc.dtype)
+    y = _grouped_ffn(xp, local_w, sched, cfg, row_scale=scale)
+    out = ref.unpermute_ref(y, sched, None) if cfg.impl != "pallas" \
+        else ops.unpermute(y, sched, None, interpret=cfg.interpret)
+    out = jax.lax.psum(out.astype(jnp.float32), axis)
+    return out.astype(x_loc.dtype), aux
+
+
+# ----------------------------------------------------------------------
+def apply_moe_ep(params, x: jnp.ndarray, cfg: MoEDispatchConfig, *,
+                 axis: str = "model", capacity_factor: float = 2.0,
+                 token_layout: str = "sharded"):
+    """Distributed MoE layer. x: (B, S, d) inside jit (GSPMD context);
+    the EP dispatch itself runs under shard_map over `axis`.
+
+    Shared experts are dense compute on (sharded) tokens — they stay in
+    plain GSPMD-land outside the shard_map.
+    """
+    mesh = _current_mesh()
+    if mesh is None or mesh.empty:
+        raise RuntimeError("apply_moe_ep requires an active mesh "
+                           "(jax.set_mesh(...) or `with mesh:`)")
+    shape = x.shape
+    d = shape[-1]
+    other = [a for a in mesh.axis_names if a != axis]
+
+    if token_layout == "sharded":
+        # tokens: flatten (B, S) and split the token dim across `axis`;
+        # batch stays on the dp axes.
+        bspec = tuple(other) if shape[0] % _axsize(mesh, other) == 0 else None
+        in_spec = P(bspec, axis, None)
+        out_spec = P(bspec, axis, None)
+
+        def body(p_loc, x_loc):
+            B_l, S_l, _ = x_loc.shape
+            y, aux = _ep_sharded_local(p_loc, x_loc.reshape(-1, d), cfg,
+                                       axis, capacity_factor)
+            return y.reshape(B_l, S_l, d), aux
+    else:
+        bspec = tuple(other) if shape[0] % _axsize(mesh, other) == 0 else None
+        in_spec = P(bspec, None, None)
+        out_spec = P(bspec, None, None)
+
+        def body(p_loc, x_loc):
+            B_l, S_l, _ = x_loc.shape
+            y, aux = _ep_replicated_local(p_loc, x_loc.reshape(-1, d), cfg,
+                                          axis)
+            return y.reshape(B_l, S_l, d), aux
+
+    routed = {k_: v for k_, v in params.items() if k_ != "shared"}
+    pspecs = {k_: (P(None, None) if k_ == "router"
+                   else P(axis, None, None))
+              for k_ in routed}
+    aux_spec = {"lb_loss": P(), "router_z": P()}
+    y, aux = jax.shard_map(
+        body, mesh=mesh, in_specs=(pspecs, in_spec),
+        out_specs=(out_spec, aux_spec), check_vma=False)(routed, x)
+
+    if "shared" in params:
+        sh = params["shared"]
+        xf = x.astype(jnp.float32)
+        g = jnp.dot(xf, sh["w_gate"].astype(jnp.float32))
+        u = jnp.dot(xf, sh["w_up"].astype(jnp.float32))
+        y = y + jnp.dot((g * jax.nn.sigmoid(g)) * u,
+                        sh["w_down"].astype(jnp.float32)).astype(y.dtype)
+    return y, aux
+
+
+def _axsize(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _current_mesh():
+    """Concrete mesh from jax.set_mesh(...) or a `with mesh:` block."""
+    from jax._src import mesh as mesh_lib
+    m = mesh_lib.get_concrete_mesh()
+    if m is not None and not getattr(m, "empty", False):
+        return m
+    return mesh_lib.thread_resources.env.physical_mesh

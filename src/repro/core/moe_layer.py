@@ -1,0 +1,67 @@
+"""Parameterized MoE layer: routed experts + optional shared experts.
+
+Wraps core.dispatch with parameter init/apply in the repo's pytree-params
+convention.  Shared experts (DeepSeek-style) are a single dense SwiGLU of
+width ``n_shared * d_ff_expert`` applied to every token (they are dense
+compute — XLA already optimal — so they bypass the dispatch pipeline, as the
+paper's framing implies)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.core.dispatch import MoEDispatchConfig, moe_ffn
+
+
+def init_moe_params(key, moe: MoEConfig, d_model: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    E, f = moe.n_experts, moe.d_ff_expert
+    s = d_model ** -0.5
+    params = {
+        "router": (jax.random.normal(ks[0], (d_model, E)) * s).astype(jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (E, d_model, f)) * s).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (E, d_model, f)) * s).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (E, f, d_model)) * f ** -0.5).astype(dtype),
+    }
+    if moe.n_shared_experts:
+        fs = moe.n_shared_experts * f
+        k1, k2, k3 = jax.random.split(ks[4], 3)
+        params["shared"] = {
+            "w_gate": (jax.random.normal(k1, (d_model, fs)) * s).astype(dtype),
+            "w_up": (jax.random.normal(k2, (d_model, fs)) * s).astype(dtype),
+            "w_down": (jax.random.normal(k3, (fs, d_model)) * fs ** -0.5).astype(dtype),
+        }
+    return params
+
+
+def dispatch_config(moe: MoEConfig, *, impl: str = "xla",
+                    fuse_gate_up: bool = True, fold_combine: bool = True,
+                    interpret=None) -> MoEDispatchConfig:
+    return MoEDispatchConfig(
+        n_experts=moe.n_experts, top_k=moe.top_k, block_m=moe.block_m,
+        impl=impl, fuse_gate_up=fuse_gate_up, fold_combine=fold_combine,
+        gating=moe.gating, norm_topk=moe.norm_topk,
+        routed_scale=moe.routed_scale, interpret=interpret)
+
+
+def apply_moe(params, x: jnp.ndarray, cfg: MoEDispatchConfig):
+    """x: (..., d) -> (y, aux). Flattens leading dims for dispatch."""
+    from repro.core.quant import effective_expert_weights, is_quantized
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    w = effective_expert_weights(params, x.dtype)
+    if is_quantized(params) and cfg.impl != "xla":
+        # dense oracle / pallas paths need materialized arrays
+        w = {k: v[jnp.arange(v.shape[0])] for k, v in w.items()}
+    y, aux = moe_ffn(x2, params["router"], w["w_gate"],
+                     w["w_up"], w["w_down"], cfg)
+    if "shared" in params:
+        sh = params["shared"]
+        xf = x2.astype(jnp.float32)
+        g = jnp.dot(xf, sh["w_gate"].astype(jnp.float32))
+        u = jnp.dot(xf, sh["w_up"].astype(jnp.float32))
+        y_sh = jnp.dot((g * jax.nn.sigmoid(g)) * u,
+                       sh["w_down"].astype(jnp.float32))
+        y = y + y_sh.astype(y.dtype)
+    return y.reshape(shape), aux

@@ -1,0 +1,69 @@
+"""Deterministic synthetic data pipeline.
+
+Markov-chain token streams with a low-entropy transition structure so a
+correct model visibly learns (loss drops well below ln(vocab)); generation
+is a pure function of (seed, step) — any restart or re-shard reproduces the
+exact same global batch, which the fault-tolerance tests rely on.
+
+``make_global_batch`` materializes the batch host-side then ``device_put``s
+against the requested sharding (the single-process analogue of per-host
+sharded loading; each host would generate only its slice in a pod)."""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+@functools.lru_cache(maxsize=8)
+def _transition(vocab: int, seed: int, branch: int = 4) -> np.ndarray:
+    """Each token can be followed by only `branch` tokens (uniformly)."""
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, vocab, size=(vocab, branch)).astype(np.int32)
+
+
+def markov_tokens(vocab: int, batch: int, seq: int, *, step: int,
+                  seed: int = 1234, branch: int = 4) -> np.ndarray:
+    trans = _transition(vocab, seed, branch)
+    rng = np.random.default_rng((seed, step))
+    toks = np.empty((batch, seq), np.int32)
+    cur = rng.integers(0, vocab, size=batch).astype(np.int32)
+    toks[:, 0] = cur
+    choices = rng.integers(0, branch, size=(batch, seq))
+    for t in range(1, seq):
+        cur = trans[cur, choices[:, t]]
+        toks[:, t] = cur
+    return toks
+
+
+def make_batch(cfg: ModelConfig, batch: int, seq: int, *, step: int,
+               accum: int = 1, seed: int = 1234) -> Dict[str, np.ndarray]:
+    lead = (accum,) if accum > 1 else ()
+    n = batch * accum
+    rng = np.random.default_rng((seed, step, 7))
+    if cfg.encoder_only:
+        labels = markov_tokens(cfg.vocab_size, n, seq, step=step, seed=seed)
+        feats = rng.normal(size=(n, seq, cfg.d_model)).astype(np.float32) \
+            + 0.5 * np.eye(cfg.d_model)[labels % cfg.d_model]
+        mask = rng.random((n, seq)) < 0.08
+        out = {"features": feats.astype(np.float32),
+               "labels": labels, "mask": mask}
+    else:
+        out = {"tokens": markov_tokens(cfg.vocab_size, n, seq, step=step,
+                                       seed=seed)}
+        if cfg.cross_attn_every:
+            out["image_embeds"] = rng.normal(
+                size=(n, cfg.n_image_tokens, cfg.d_model)
+            ).astype(np.float32) * 0.3
+    return {k: v.reshape(lead + (batch,) + v.shape[1:]) for k, v in
+            out.items()}
+
+
+def device_batch(batch: Dict[str, np.ndarray], shardings=None):
+    if shardings is None:
+        return {k: jax.device_put(v) for k, v in batch.items()}
+    return {k: jax.device_put(v, shardings[k]) for k, v in batch.items()}

@@ -1,0 +1,51 @@
+"""Lightweight activation-sharding context.
+
+Model code calls ``constrain("<hook>", x)`` at a handful of semantically
+meaningful points (residual stream, qkv, mixer heads...).  Outside a
+``use_rules`` context these are no-ops, so single-device tests and CPU
+benchmarks never see a mesh; the launcher installs per-(arch x mode) rules
+from distributed/sharding.py around the jitted step."""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def current_rules():
+    return getattr(_state, "rules", None), getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Mesh, rules: Dict[str, P]):
+    prev = current_rules()
+    _state.rules, _state.mesh = rules, mesh
+    try:
+        yield
+    finally:
+        _state.rules, _state.mesh = prev
+
+
+def constrain(name: str, x):
+    rules, mesh = current_rules()
+    if rules is None or name not in rules or x is None:
+        return x
+    spec = rules[name]
+    # drop axes that do not divide the corresponding dim
+    fixed = []
+    for dim, ax in zip(x.shape, tuple(spec) + (None,) * (x.ndim - len(spec))):
+        if ax is None:
+            fixed.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        fixed.append(ax if dim % size == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*fixed)))

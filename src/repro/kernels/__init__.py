@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the paper's MoE dispatch pipeline.
+
+Layout per kernel: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrappers, block-size policy), ref.py (pure-jnp oracles).
+"""
+from repro.kernels import ops, ref  # noqa: F401

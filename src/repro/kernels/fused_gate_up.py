@@ -1,0 +1,94 @@
+"""Fused gate+up grouped GEMM with in-register SiLU — the paper's §3.3.
+
+Both SwiGLU projections are computed from the SAME input tile per grid step:
+the A block is DMA'd HBM->VMEM once and feeds two MXU matmuls whose fp32
+accumulators live in VMEM scratch.  The SiLU(gate) * up epilogue runs in
+vector registers before a single bf16 copy-out, so the ``gate_out`` and
+``up_out`` intermediates never exist in HBM.
+
+HBM traffic (T tokens, K = d_model, F = d_ffn, bf16):
+  unfused: A read twice (2*T*K*2B) + gate_out/up_out written + read back
+           (4*T*F*2B) + intermediate written (T*F*2B)   = 10TF + 4TK bytes*
+  fused:   A read once (T*K*2B) + intermediate written (T*F*2B) = 2TF + 2TK
+  (*weight traffic identical in both; the paper counts a subset of these
+  terms and lands on ~35% — our accounting in benchmarks/stage_roofline.py
+  reports both conventions.)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(block_expert_ref, block_active_ref,       # scalar prefetch
+            x_ref, wg_ref, wu_ref,                    # inputs
+            out_ref,                                  # output
+            acc_g_ref, acc_u_ref,                     # scratch
+            *, n_k: int):
+    m, _, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    active = block_active_ref[m] == 1
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_g_ref[...] = jnp.zeros_like(acc_g_ref)
+        acc_u_ref[...] = jnp.zeros_like(acc_u_ref)
+
+    @pl.when(active)
+    def _accum():
+        x = x_ref[...]                                # one VMEM A-tile ...
+        acc_g_ref[...] += jnp.dot(x, wg_ref[0],      # ... two MXU issues
+                                  preferred_element_type=jnp.float32)
+        acc_u_ref[...] += jnp.dot(x, wu_ref[0],
+                                  preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        g = acc_g_ref[...]
+        h = g * jax.nn.sigmoid(g) * acc_u_ref[...]    # SiLU(g) * u, in VREGs
+        out_ref[...] = h.astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "interpret", "out_dtype"))
+def fused_gate_up(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+                  block_expert: jnp.ndarray, block_active: jnp.ndarray, *,
+                  block_m: int, block_n: int, block_k: int,
+                  interpret: bool = False, out_dtype=None) -> jnp.ndarray:
+    """x: (capacity, K); w_gate/w_up: (E, K, F) -> silu(x@wg)*(x@wu): (capacity, F)."""
+    capacity, K = x.shape
+    _, _, F = w_gate.shape
+    assert w_up.shape == w_gate.shape
+    assert capacity % block_m == 0 and K % block_k == 0 and F % block_n == 0, (
+        f"shape {(capacity, K, F)} not divisible by blocks "
+        f"{(block_m, block_k, block_n)}")
+    n_m, n_n, n_k = capacity // block_m, F // block_n, K // block_k
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_m, n_n, n_k),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda m, n, k, be, ba: (m, k)),
+            pl.BlockSpec((1, block_k, block_n),
+                         lambda m, n, k, be, ba: (be[m], k, n)),
+            pl.BlockSpec((1, block_k, block_n),
+                         lambda m, n, k, be, ba: (be[m], k, n)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n),
+                               lambda m, n, k, be, ba: (m, n)),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32),
+                        pltpu.VMEM((block_m, block_n), jnp.float32)],
+    )
+    fn = pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((capacity, F), out_dtype or x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )
+    return fn(block_expert, block_active, x, w_gate, w_up)

@@ -1,0 +1,108 @@
+"""Block-scheduled grouped GEMM — the paper's §3.2, TPU-native.
+
+One ``pallas_call`` computes ``out[block i] = x[block i] @ w[expert(i)]`` for
+every M-tile in the tile-aligned expert-contiguous layout.  The schedule
+(block->expert, block->active) is passed as scalar-prefetch operands so the
+weight ``BlockSpec.index_map`` selects each block's expert weights while the
+DMA pipeline is still ahead of compute — the TPU replacement for the paper's
+precomputed (expert_id, token_offset) grid mapping.
+
+Optional epilogue: per-row scale (the top-k combine weight) fused into the
+down projection — possible here because Pallas epilogues are ordinary vector
+code (the paper's Triton version could not, its Limitation 1).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(block_expert_ref, block_active_ref,   # scalar prefetch
+            x_ref, w_ref, scale_ref,              # inputs (scale may be None)
+            out_ref,                              # output
+            acc_ref,                              # scratch
+            *, n_k: int, has_scale: bool):
+    m, _, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    active = block_active_ref[m] == 1
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(active)
+    def _accum():
+        acc_ref[...] += jnp.dot(x_ref[...], w_ref[0],
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        acc = acc_ref[...]
+        if has_scale:
+            acc = acc * scale_ref[...].astype(jnp.float32)
+        out_ref[...] = acc.astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "interpret", "out_dtype"))
+def grouped_gemm(x: jnp.ndarray, w: jnp.ndarray,
+                 block_expert: jnp.ndarray, block_active: jnp.ndarray,
+                 row_scale: jnp.ndarray | None = None, *,
+                 block_m: int, block_n: int, block_k: int,
+                 interpret: bool = False, out_dtype=None) -> jnp.ndarray:
+    """x: (capacity, K) tile-aligned expert-contiguous; w: (E, K, N);
+    block_expert/block_active: (capacity // block_m,);
+    row_scale: optional (capacity,) fused epilogue scale -> (capacity, N)."""
+    capacity, K = x.shape
+    _, _, N = w.shape
+    assert capacity % block_m == 0 and K % block_k == 0 and N % block_n == 0, (
+        f"shape {(capacity, K, N)} not divisible by blocks "
+        f"{(block_m, block_k, block_n)}")
+    n_m, n_n, n_k = capacity // block_m, N // block_n, K // block_k
+    has_scale = row_scale is not None
+
+    in_specs = [
+        pl.BlockSpec((block_m, block_k), lambda m, n, k, be, ba: (m, k)),
+        pl.BlockSpec((1, block_k, block_n), lambda m, n, k, be, ba: (be[m], k, n)),
+    ]
+    operands = [x, w]
+    if has_scale:
+        in_specs.append(
+            pl.BlockSpec((block_m, 1), lambda m, n, k, be, ba: (m, 0)))
+        operands.append(row_scale.reshape(capacity, 1).astype(jnp.float32))
+    else:
+        in_specs.append(None)
+        operands.append(None)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_m, n_n, n_k),
+        in_specs=[s for s in in_specs if s is not None],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda m, n, k, be, ba: (m, n)),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+    )
+
+    kernel = functools.partial(_kernel, n_k=n_k, has_scale=has_scale)
+    if not has_scale:
+        # adapt arity: drop the scale ref
+        def kernel(be, ba, x_ref, w_ref, out_ref, acc_ref):  # noqa: F811
+            _kernel(be, ba, x_ref, w_ref, None, out_ref, acc_ref,
+                    n_k=n_k, has_scale=False)
+
+    out_dtype = out_dtype or x.dtype
+    fn = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((capacity, N), out_dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )
+    args = [block_expert, block_active, x, w]
+    if has_scale:
+        args.append(operands[2])
+    return fn(*args)

@@ -1,0 +1,105 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Handles block-size selection (MXU-aligned divisors), automatic
+``interpret=True`` off-TPU (this container validates kernels on CPU in
+interpret mode; the compiled target is TPU v5e), and adapts the
+schedule-carrying call signatures to the BlockSchedule tuple.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.schedule import BlockSchedule
+from repro.kernels import fused_gate_up as _fgu
+from repro.kernels import grouped_gemm as _gg
+from repro.kernels import permute as _perm
+from repro.kernels import router_topk as _router
+from repro.kernels import unpermute as _unperm
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interp(flag: bool | None) -> bool:
+    return (not on_tpu()) if flag is None else flag
+
+
+def pick_block(n: int, target: int, align: int = 128) -> int:
+    """Largest divisor of n that is <= target, preferring MXU alignment."""
+    target = min(n, target)
+    for a in (align, 8, 1):
+        if n % a == 0:
+            b = (target // a) * a
+            while b >= a:
+                if n % b == 0:
+                    return b
+                b -= a
+    return 1
+
+
+# ----------------------------------------------------------------------
+def router_topk(logits: jnp.ndarray, *, top_k: int, gating: str = "softmax",
+                norm_topk: bool = False, routed_scale: float = 1.0,
+                block_t: int = 256, interpret: bool | None = None):
+    T = logits.shape[0]
+    return _router.router_topk(
+        logits, top_k=top_k, gating=gating, norm_topk=norm_topk,
+        routed_scale=routed_scale, block_t=pick_block(T, block_t, align=8),
+        interpret=_interp(interpret))
+
+
+def permute(x: jnp.ndarray, sched: BlockSchedule, *, block_d: int = 2048,
+            interpret: bool | None = None) -> jnp.ndarray:
+    return _perm.permute(x, sched.src_tok,
+                         block_d=pick_block(x.shape[-1], block_d),
+                         interpret=_interp(interpret))
+
+
+def unpermute(y: jnp.ndarray, sched: BlockSchedule,
+              weights: jnp.ndarray | None, *, block_d: int = 2048,
+              interpret: bool | None = None) -> jnp.ndarray:
+    return _unperm.unpermute(y, sched.pos, weights,
+                             block_d=pick_block(y.shape[-1], block_d),
+                             interpret=_interp(interpret))
+
+
+def grouped_gemm(x: jnp.ndarray, w: jnp.ndarray, sched: BlockSchedule,
+                 row_scale: jnp.ndarray | None = None, *,
+                 block_n: int = 512, block_k: int = 512,
+                 interpret: bool | None = None) -> jnp.ndarray:
+    _, K, N = w.shape
+    return _gg.grouped_gemm(
+        x, w, sched.block_expert, sched.block_active, row_scale,
+        block_m=sched.block_m,
+        block_n=pick_block(N, block_n), block_k=pick_block(K, block_k),
+        interpret=_interp(interpret))
+
+
+def fused_gate_up(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+                  sched: BlockSchedule, *, block_n: int = 512,
+                  block_k: int = 512,
+                  interpret: bool | None = None) -> jnp.ndarray:
+    _, K, F = w_gate.shape
+    return _fgu.fused_gate_up(
+        x, w_gate, w_up, sched.block_expert, sched.block_active,
+        block_m=sched.block_m,
+        block_n=pick_block(F, block_n), block_k=pick_block(K, block_k),
+        interpret=_interp(interpret))
+
+
+def grouped_wgrad(x: jnp.ndarray, dy: jnp.ndarray, sched: BlockSchedule,
+                  n_experts: int, *, block_n: int = 512, block_k: int = 512,
+                  interpret: bool | None = None) -> jnp.ndarray:
+    """Training-backward tgmm: dW[e] = x_e^T dy_e over the padded layout.
+    Experts that received zero tokens never get their block flushed by the
+    kernel, so they are explicitly zeroed here."""
+    from repro.kernels import grouped_wgrad as _wg
+    K, N = x.shape[-1], dy.shape[-1]
+    dw = _wg.grouped_wgrad(
+        x, dy, sched.block_expert, sched.block_active,
+        n_experts=n_experts, block_m=sched.block_m,
+        block_k=pick_block(K, block_k), block_n=pick_block(N, block_n),
+        interpret=_interp(interpret))
+    return jnp.where((sched.counts > 0)[:, None, None], dw, 0.0)

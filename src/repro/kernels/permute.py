@@ -1,0 +1,51 @@
+"""Token permutation kernel — the paper's §3.5 gather, TPU form.
+
+Scatter-to-expert-contiguous is expressed as its inverse gather: grid step
+(i, j) copies hidden-dim tile j of source token ``src_tok[i]`` into padded
+row i.  The row index comes from a scalar-prefetch table consumed by the
+input ``BlockSpec.index_map``, which turns the Pallas pipeline into a
+sequence of gather DMAs (HBM->VMEM->HBM) — the TPU analogue of the paper's
+coalesced BLOCK_D-tiled gather.  Padding rows (src_tok == -1) are zero-filled
+so downstream grouped GEMMs see exact zeros.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(src_ref, x_ref, out_ref):
+    i = pl.program_id(0)
+    valid = src_ref[i] >= 0
+    out_ref[...] = jnp.where(valid, x_ref[...], 0).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def permute(x: jnp.ndarray, src_tok: jnp.ndarray, *, block_d: int = 0,
+            interpret: bool = False) -> jnp.ndarray:
+    """x: (T, d); src_tok: (capacity,) int32 (-1 = padding) -> (capacity, d)."""
+    T, d = x.shape
+    capacity = src_tok.shape[0]
+    block_d = block_d or d
+    assert d % block_d == 0
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(capacity, d // block_d),
+        in_specs=[pl.BlockSpec(
+            (1, block_d), lambda i, j, src: (jnp.maximum(src[i], 0), j))],
+        out_specs=pl.BlockSpec((1, block_d), lambda i, j, src: (i, j)),
+    )
+    fn = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((capacity, d), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )
+    return fn(src_tok, x)

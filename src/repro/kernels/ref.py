@@ -1,0 +1,167 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+Each function is the mathematical specification that the corresponding kernel
+in this package must reproduce (asserted with assert_allclose in
+tests/test_kernels.py across shape/dtype sweeps).  The refs are also the
+CPU-fast execution path used by the full-scale dry-run (see
+core/dispatch.py, impl="xla").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.schedule import BlockSchedule
+
+
+# ----------------------------------------------------------------------
+# Router (paper §3.4)
+# ----------------------------------------------------------------------
+def router_ref(logits: jnp.ndarray, top_k: int, *, gating: str = "softmax",
+               norm_topk: bool = False, routed_scale: float = 1.0):
+    """Stable gating + iterative-argmax top-k.
+
+    Matches the kernel's selection semantics exactly: iterative argmax with
+    -inf masking (the paper masks with -1.0 because its scores live in [0,1];
+    -inf is the strictly-safe generalization), ties broken toward the lowest
+    expert index.
+
+    logits: (T, E) -> (weights (T, k) f32, indices (T, k) i32)
+    """
+    x = logits.astype(jnp.float32)
+    if gating == "softmax":
+        x = x - jax.lax.stop_gradient(jnp.max(x, axis=-1, keepdims=True))
+        e = jnp.exp(x)
+        scores = e / jnp.sum(e, axis=-1, keepdims=True)
+    elif gating == "sigmoid":
+        scores = jax.nn.sigmoid(x)
+    else:
+        raise ValueError(f"unknown gating {gating!r}")
+
+    E = scores.shape[-1]
+    masked = scores
+    idxs, ws = [], []
+    for _ in range(top_k):
+        idx = jnp.argmax(masked, axis=-1)
+        w = jnp.take_along_axis(scores, idx[:, None], axis=-1)[:, 0]
+        idxs.append(idx.astype(jnp.int32))
+        ws.append(w)
+        onehot = jax.nn.one_hot(idx, E, dtype=jnp.bool_)
+        masked = jnp.where(onehot, -jnp.inf, masked)
+    indices = jnp.stack(idxs, axis=-1)
+    weights = jnp.stack(ws, axis=-1)
+    if norm_topk:
+        weights = weights / (jnp.sum(weights, axis=-1, keepdims=True) + 1e-20)
+    return weights * routed_scale, indices
+
+
+# ----------------------------------------------------------------------
+# Permute / unpermute (paper §3.5)
+# ----------------------------------------------------------------------
+def permute_ref(x: jnp.ndarray, sched: BlockSchedule) -> jnp.ndarray:
+    """Gather token rows into the padded expert-contiguous layout.
+
+    x: (T, d) -> (capacity, d); padding rows (src_tok == -1) are zeros.
+    """
+    valid = sched.src_tok >= 0
+    rows = x[jnp.maximum(sched.src_tok, 0)]
+    return jnp.where(valid[:, None], rows, 0).astype(x.dtype)
+
+
+def unpermute_ref(y: jnp.ndarray, sched: BlockSchedule,
+                  weights: jnp.ndarray | None) -> jnp.ndarray:
+    """Weighted gather-combine back to token order, fp32 accumulation.
+
+    y: (capacity, d); weights: (T, k) or None (weights already folded into the
+    down projection) -> (T, d)
+    """
+    T, k = sched.pos.shape
+    gathered = y[sched.pos.reshape(-1)].reshape(T, k, -1).astype(jnp.float32)
+    if weights is not None:
+        gathered = gathered * weights[..., None].astype(jnp.float32)
+    return jnp.sum(gathered, axis=1).astype(y.dtype)
+
+
+# ----------------------------------------------------------------------
+# Grouped GEMMs (paper §3.2 / §3.3)
+# ----------------------------------------------------------------------
+def _block_gather_matmul(x: jnp.ndarray, w: jnp.ndarray, sched: BlockSchedule):
+    """Yield (x_blocks (B, M, K), w_blocks (B, K, N)) for a block-level ref."""
+    M = sched.block_m
+    nb = sched.capacity // M
+    xb = x.reshape(nb, M, x.shape[-1])
+    wb = w[sched.block_expert]
+    return xb, wb
+
+
+def grouped_gemm_ref(x: jnp.ndarray, w: jnp.ndarray, sched: BlockSchedule,
+                     row_scale: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Block-scheduled grouped GEMM: out[block i] = x[block i] @ w[expert(i)].
+
+    x: (capacity, K), w: (E, K, N), row_scale: optional (capacity,) fp32
+    epilogue scale (the fused combine-weight optimization) -> (capacity, N).
+    """
+    xb, wb = _block_gather_matmul(x, w, sched)
+    out = jnp.einsum("bmk,bkn->bmn", xb.astype(jnp.float32),
+                     wb.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    out = out * sched.block_active[:, None, None].astype(jnp.float32)
+    out = out.reshape(sched.capacity, -1)
+    if row_scale is not None:
+        out = out * row_scale[:, None].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def fused_gate_up_ref(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+                      sched: BlockSchedule) -> jnp.ndarray:
+    """Fused SwiGLU projections: silu(x @ w_gate) * (x @ w_up), fp32 epilogue.
+
+    x: (capacity, K), w_*: (E, K, N) -> (capacity, N)
+    """
+    xb, wgb = _block_gather_matmul(x, w_gate, sched)
+    _, wub = _block_gather_matmul(x, w_up, sched)
+    g = jnp.einsum("bmk,bkn->bmn", xb.astype(jnp.float32), wgb.astype(jnp.float32))
+    u = jnp.einsum("bmk,bkn->bmn", xb.astype(jnp.float32), wub.astype(jnp.float32))
+    out = (g * jax.nn.sigmoid(g)) * u
+    out = out * sched.block_active[:, None, None].astype(jnp.float32)
+    return out.reshape(sched.capacity, -1).astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# Whole-layer dense oracle (the paper's "PyTorch reference" analogue)
+# ----------------------------------------------------------------------
+def moe_ffn_dense_ref(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+                      w_down: jnp.ndarray, weights: jnp.ndarray,
+                      indices: jnp.ndarray) -> jnp.ndarray:
+    """Loop-over-experts oracle: y_t = sum_j w_tj * FFN_{e_tj}(x_t).
+
+    Computes every expert densely and combines with a mask — O(T*E*ffn)
+    compute, exact semantics.  x: (T, d); w_gate/w_up: (E, d, f);
+    w_down: (E, f, d); weights/indices: (T, k).
+    """
+    xf = x.astype(jnp.float32)
+    g = jnp.einsum("td,edf->tef", xf, w_gate.astype(jnp.float32))
+    u = jnp.einsum("td,edf->tef", xf, w_up.astype(jnp.float32))
+    h = (g * jax.nn.sigmoid(g)) * u
+    y_all = jnp.einsum("tef,efd->ted", h, w_down.astype(jnp.float32))  # (T,E,d)
+    E = w_gate.shape[0]
+    combine = jnp.zeros((x.shape[0], E), jnp.float32)
+    onehot = jax.nn.one_hot(indices, E, dtype=jnp.float32)             # (T,k,E)
+    combine = jnp.einsum("tk,tke->te", weights.astype(jnp.float32), onehot)
+    return jnp.einsum("te,ted->td", combine, y_all).astype(x.dtype)
+
+
+def grouped_wgrad_ref(x: jnp.ndarray, dy: jnp.ndarray,
+                      sched: BlockSchedule, n_experts: int) -> jnp.ndarray:
+    """Weight gradient of the grouped GEMM: dW[e] = x_e^T @ dy_e.
+
+    x: (capacity, K); dy: (capacity, N) -> (E, K, N), fp32. Padding rows of
+    x are zeros so they contribute nothing."""
+    M = sched.block_m
+    nb = sched.capacity // M
+    xb = x.reshape(nb, M, -1).astype(jnp.float32)
+    dyb = dy.reshape(nb, M, -1).astype(jnp.float32)
+    per_block = jnp.einsum("bmk,bmn->bkn", xb, dyb)
+    per_block = per_block * sched.block_active[:, None, None]
+    dw = jnp.zeros((n_experts, x.shape[-1], dy.shape[-1]), jnp.float32)
+    return dw.at[sched.block_expert].add(per_block)

@@ -1,0 +1,83 @@
+"""Unpermute + weighted-combine kernel — the paper's §3.5 inverse scatter.
+
+For token t, the k expert outputs live at padded rows ``pos[t, :]``.  The
+grid is (T, d-tiles, k) with k innermost: the output block (t, j) is
+*revisited* across the k axis, accumulating ``w[t, c] * y[pos[t, c]]`` into an
+fp32 VMEM scratch (the paper's FP32 accumulation), written out once on the
+last visit.  When the combine weights were already folded into the down
+projection's epilogue (our beyond-paper fusion), the caller passes
+``weights=None`` and the kernel degenerates to an unweighted sum.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(pos_ref, y_ref, w_ref, out_ref, acc_ref, *, top_k: int,
+            has_weights: bool):
+    c = pl.program_id(2)
+
+    contrib = y_ref[...].astype(jnp.float32)
+    if has_weights:
+        contrib = contrib * w_ref[0, c]
+
+    @pl.when(c == 0)
+    def _init():
+        acc_ref[...] = contrib
+
+    @pl.when(c != 0)
+    def _accum():
+        acc_ref[...] += contrib
+
+    @pl.when(c == top_k - 1)
+    def _write():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def unpermute(y: jnp.ndarray, pos: jnp.ndarray,
+              weights: jnp.ndarray | None, *, block_d: int = 0,
+              interpret: bool = False) -> jnp.ndarray:
+    """y: (capacity, d); pos: (T, k) padded-row of expanded token (t, c);
+    weights: (T, k) combine weights or None (already folded) -> (T, d)."""
+    capacity, d = y.shape
+    T, k = pos.shape
+    block_d = block_d or d
+    assert d % block_d == 0
+    has_weights = weights is not None
+    pos_flat = pos.reshape(-1).astype(jnp.int32)
+
+    in_specs = [pl.BlockSpec(
+        (1, block_d), lambda t, j, c, pos: (pos[t * k + c], j))]
+    operands = [y]
+    if has_weights:
+        in_specs.append(pl.BlockSpec((1, k), lambda t, j, c, pos: (t, 0)))
+        operands.append(weights.astype(jnp.float32))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(T, d // block_d, k),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, block_d), lambda t, j, c, pos: (t, j)),
+        scratch_shapes=[pltpu.VMEM((1, block_d), jnp.float32)],
+    )
+
+    kernel = functools.partial(_kernel, top_k=k, has_weights=has_weights)
+    if not has_weights:
+        def kernel(pos_r, y_r, out_r, acc_r):  # noqa: F811
+            _kernel(pos_r, y_r, None, out_r, acc_r, top_k=k, has_weights=False)
+
+    fn = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, d), y.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )
+    return fn(pos_flat, *operands)

@@ -1,0 +1,64 @@
+"""Serving launcher: load (or init) weights, optionally int8-quantize the
+routed experts (the §Perf cell-3 deployment layout), and run batched
+requests through the slot engine.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch moonshot-v1-16b-a3b \\
+        --reduce --requests 6 --quant-experts
+"""
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduce", action="store_true")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--capacity", type=int, default=128)
+    ap.add_argument("--quant-experts", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    import numpy as np
+    import jax
+
+    from repro.configs import get_config, reduced
+    from repro.models import RunConfig, init_params
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = get_config(args.arch)
+    if args.reduce:
+        cfg = reduced(cfg)
+    if not cfg.has_decode:
+        raise SystemExit(f"{args.arch} is encoder-only: no decode path")
+
+    params = init_params(cfg, jax.random.key(0))
+    if args.ckpt_dir:
+        from repro.checkpoint.manager import CheckpointManager
+        mgr = CheckpointManager(args.ckpt_dir)
+        state = mgr.restore(jax.eval_shape(lambda: {
+            "params": init_params(cfg, jax.random.key(0))}))
+        params = state["params"]
+    if args.quant_experts and cfg.is_moe:
+        from repro.core.quant import quantize_params_tree
+        params = quantize_params_tree(params)
+        print("routed experts quantized to int8 (serving layout)")
+
+    engine = ServeEngine(cfg, params, slots=args.slots,
+                         capacity=args.capacity,
+                         rc=RunConfig(q_chunk=64, kv_chunk=64))
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        rng.integers(3, 9)).astype(np.int32),
+                    max_new=args.max_new)
+            for i in range(args.requests)]
+    engine.run(reqs)
+    for r in reqs:
+        print(f"req {r.rid}: {r.prompt.tolist()} -> {r.out}")
+    assert all(r.done for r in reqs)
+
+
+if __name__ == "__main__":
+    main()

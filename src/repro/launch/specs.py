@@ -1,0 +1,175 @@
+"""ShapeDtypeStruct stand-ins + shardings for every dry-run cell.
+
+``cell_inputs`` returns everything needed to ``jax.jit(step).lower(...)`` a
+cell without allocating a single real array: abstract params/opt-state (via
+``jax.eval_shape`` over the real initializers), abstract batches and KV
+caches, and the matching NamedSharding trees from distributed/sharding.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ModelConfig, ShapeConfig, get_config
+from repro.distributed.sharding import (activation_rules, batch_specs,
+                                        cache_specs, param_specs)
+from repro.models.lm import RunConfig, init_cache, init_params
+from repro.optim.adamw import init_opt_state
+
+# per-(arch-family, shape) grad-accumulation microbatch counts
+ACCUM = {
+    "train_4k": 4,
+}
+# memory-driven overrides (param + moment footprint)
+ACCUM_OVERRIDES = {
+    ("deepseek-v2-236b", "train_4k"): 2,
+}
+
+
+def dryrun_runconfig(cfg: ModelConfig, shape: ShapeConfig, *,
+                     ep: bool = True) -> RunConfig:
+    """Execution policy for full-scale lowering (see DESIGN.md §5)."""
+    is_seq_model = cfg.family in ("ssm", "hybrid")
+    return RunConfig(
+        compute_dtype=jnp.bfloat16,
+        param_dtype=jnp.bfloat16,
+        moe_impl="xla",
+        ep=bool(cfg.is_moe and ep),
+        remat=(shape.kind == "train"),
+        # CP: full-q chunk (each rank computes its sequence shard);
+        # TP-heads archs chunk both ways to bound score buffers.
+        q_chunk=(1024 if is_seq_model else 0),
+        kv_chunk=1024,
+        loss_chunk=512,
+        capacity_factor=2.0,
+    )
+
+
+def accum_steps(arch: str, shape: ShapeConfig) -> int:
+    return ACCUM_OVERRIDES.get((arch, shape.name),
+                               ACCUM.get(shape.name, 1))
+
+
+def abstract_batch(cfg: ModelConfig, shape: ShapeConfig,
+                   accum: int = 1) -> Dict[str, jax.ShapeDtypeStruct]:
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        B, S = shape.global_batch, 1
+    lead: Tuple[int, ...] = ()
+    if accum > 1:
+        assert B % accum == 0
+        lead, B = (accum,), B // accum
+    f32 = jnp.bfloat16
+    batch: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.encoder_only:
+        batch["features"] = jax.ShapeDtypeStruct(
+            lead + (B, S, cfg.d_model), f32)
+        batch["labels"] = jax.ShapeDtypeStruct(lead + (B, S), jnp.int32)
+        batch["mask"] = jax.ShapeDtypeStruct(lead + (B, S), jnp.bool_)
+    else:
+        batch["tokens"] = jax.ShapeDtypeStruct(lead + (B, S), jnp.int32)
+    if cfg.cross_attn_every:
+        batch["image_embeds"] = jax.ShapeDtypeStruct(
+            lead + (B, cfg.n_image_tokens, cfg.d_model), f32)
+    return batch
+
+
+class CellInputs(NamedTuple):
+    step_fn: Any
+    args: tuple                 # abstract args for .lower(*args)
+    in_shardings: tuple
+    out_shardings: Any
+    rules: Dict[str, P]
+    rc: RunConfig
+    meta: Dict[str, Any]
+
+
+def cell_inputs(arch: str, shape: ShapeConfig, mesh: Mesh,
+                rc: Optional[RunConfig] = None, *,
+                accum: Optional[int] = None, layout: str = "fsdp",
+                pin_grads: bool = False,
+                quant_experts: bool = False) -> CellInputs:
+    cfg = get_config(arch)
+    rc = rc or dryrun_runconfig(cfg, shape)
+    ns = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+    def _init(key):
+        p = init_params(cfg, key, param_dtype=rc.param_dtype)
+        if quant_experts:
+            from repro.core.quant import quantize_params_tree
+            p = quantize_params_tree(p)
+        return p
+
+    params_abs = jax.eval_shape(_init, jax.random.key(0))
+    pspecs = param_specs(params_abs, cfg, mesh, mode=layout)
+
+    if shape.kind == "train":
+        A = accum if accum is not None else accum_steps(arch, shape)
+        from repro.optim.adamw import OptConfig
+        from repro.train.step import make_train_step
+        opt_abs = jax.eval_shape(init_opt_state, params_abs)
+        ospecs = {"m": pspecs, "v": pspecs, "step": P()}
+        state_abs = {"params": params_abs, "opt": opt_abs}
+        state_specs = {"params": pspecs, "opt": ospecs}
+        batch = abstract_batch(cfg, shape, A)
+        bspecs = batch_specs(cfg, mesh, "train", shape.global_batch // A,
+                             microbatched=(A > 1))
+        bspecs = {k: bspecs[k] for k in batch}
+        step = make_train_step(cfg, rc, OptConfig(), accum_steps=A,
+                               grad_shardings=ns(pspecs) if pin_grads
+                               else None)
+        return CellInputs(
+            step, (state_abs, batch),
+            (ns(state_specs), ns(bspecs)),
+            (ns(state_specs), None),
+            activation_rules(cfg, mesh, "train", shape.global_batch // A),
+            rc, {"accum": A, "mode": "train", "layout": layout,
+                 "pin_grads": pin_grads})
+
+    if shape.kind == "prefill":
+        batch = abstract_batch(cfg, shape)
+        bspecs = {k: v for k, v in batch_specs(
+            cfg, mesh, "prefill", shape.global_batch).items() if k in batch}
+        if cfg.encoder_only:
+            from repro.serve.step import make_forward_only
+            step = make_forward_only(cfg, rc)
+            return CellInputs(
+                step, (params_abs, batch), (ns(pspecs), ns(bspecs)), None,
+                activation_rules(cfg, mesh, "prefill", shape.global_batch),
+                rc, {"mode": "encode", "layout": layout})
+        from repro.serve.step import make_prefill_step
+        cache_abs = jax.eval_shape(
+            lambda: init_cache(cfg, shape.global_batch, shape.seq_len,
+                               jnp.bfloat16))
+        cspecs = cache_specs(cache_abs, cfg, mesh, shape.global_batch)
+        step = make_prefill_step(cfg, rc)
+        return CellInputs(
+            step, (params_abs, batch, cache_abs),
+            (ns(pspecs), ns(bspecs), ns(cspecs)),
+            (None, ns(cspecs)),
+            activation_rules(cfg, mesh, "prefill", shape.global_batch),
+            rc, {"mode": "prefill", "layout": layout})
+
+    # decode
+    from repro.serve.step import make_decode_step
+    batch = abstract_batch(cfg, shape)
+    bspecs = {k: v for k, v in batch_specs(
+        cfg, mesh, "decode", shape.global_batch).items() if k in batch}
+    cache_abs = jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len,
+                           jnp.bfloat16))
+    cspecs = cache_specs(cache_abs, cfg, mesh, shape.global_batch)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    step = make_decode_step(cfg, rc)
+    return CellInputs(
+        step, (params_abs, batch, cache_abs, pos),
+        (ns(pspecs), ns(bspecs), ns(cspecs), NamedSharding(mesh, P())),
+        (None, None, ns(cspecs)),
+        activation_rules(cfg, mesh, "decode", shape.global_batch),
+        rc, {"mode": "decode", "layout": layout})

@@ -1,0 +1,3 @@
+"""Model substrate: the 10 assigned architectures on a shared block library."""
+from repro.models.lm import (RunConfig, forward, group_structure, init_cache,  # noqa: F401
+                             init_params, loss_fn)

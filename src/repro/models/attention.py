@@ -1,0 +1,266 @@
+"""Attention substrate: chunked ("flash") attention in pure JAX.
+
+No T^2 tensor is ever materialized: the computation is a scan over query
+chunks with an inner scan over KV chunks carrying running (max, denom, acc)
+statistics — the standard online-softmax formulation.  This is what the
+full-scale dry-run lowers (32k prefill would otherwise need multi-GB score
+buffers), and it is exact (tests compare against naive attention).
+
+Features: GQA (grouped KV heads), causal masks, sliding windows (gemma2
+local layers — banded so FLOPs stay O(S*W)), attention-logit softcap,
+bidirectional (encoder) mode, cross-attention, decode with a KV-position
+limit, and ``return_stats`` for the cross-device flash-decode LSE combine
+(distributed/decode.py)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.blocks import dense_init, rope
+
+NEG_INF = -1e30  # finite -inf stand-in: keeps exp()/where() NaN-free
+
+
+def init_attn(key, d_model: int, n_heads: int, n_kv_heads: int, head_dim: int,
+              bias: bool, dtype=jnp.float32, v_head_dim: int = 0):
+    vd = v_head_dim or head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d_model, n_heads * head_dim), dtype=dtype),
+        "wk": dense_init(ks[1], (d_model, n_kv_heads * head_dim), dtype=dtype),
+        "wv": dense_init(ks[2], (d_model, n_kv_heads * vd), dtype=dtype),
+        "wo": dense_init(ks[3], (n_heads * vd, d_model), dtype=dtype),
+    }
+    if bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv_heads * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv_heads * vd,), dtype)
+    return p
+
+
+def project_qkv(p, x: jnp.ndarray, xkv: jnp.ndarray, n_heads: int,
+                n_kv_heads: int, head_dim: int, v_head_dim: int = 0):
+    """x: (B, S, d) queries source; xkv: (B, Skv, d) key/value source."""
+    vd = v_head_dim or head_dim
+    dt = x.dtype
+    q = jnp.dot(x, p["wq"].astype(dt))
+    k = jnp.dot(xkv, p["wk"].astype(dt))
+    v = jnp.dot(xkv, p["wv"].astype(dt))
+    if "bq" in p:
+        q, k, v = q + p["bq"].astype(dt), k + p["bk"].astype(dt), v + p["bv"].astype(dt)
+    B, S, _ = x.shape
+    Skv = xkv.shape[1]
+    return (q.reshape(B, S, n_heads, head_dim),
+            k.reshape(B, Skv, n_kv_heads, head_dim),
+            v.reshape(B, Skv, n_kv_heads, vd))
+
+
+def _pick_chunk(n: int, target: int) -> int:
+    c = min(n, target)
+    while n % c:
+        c -= 1
+    return c
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "logit_softcap", "q_chunk",
+                     "kv_chunk", "return_stats"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    logit_softcap: Optional[float] = None,
+                    q_offset=0, kv_offset=0,
+                    kv_limit: Optional[jnp.ndarray] = None,
+                    q_chunk: int = 512, kv_chunk: int = 512,
+                    return_stats: bool = False):
+    """q: (B, Sq, Hq, D); k: (B, Skv, Hkv, D); v: (B, Skv, Hkv, Dv).
+
+    q_offset/kv_offset: absolute position of the first query/key (CP shards
+    pass their global offsets).  kv_limit: inclusive max attended key
+    position, scalar or (B,) (decode).  Returns (B, Sq, Hq, Dv); with
+    return_stats, returns (unnormalized_acc, sumexp l, rowmax m) for LSE
+    combination across KV shards.
+    """
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, Dv = v.shape[0], k.shape[1], k.shape[2], v.shape[-1]
+    G = Hq // Hkv
+    qc = _pick_chunk(Sq, q_chunk)
+    kc = _pick_chunk(Skv, kv_chunk)
+    nq, nk = Sq // qc, Skv // kc
+
+    # keep q/k/v in their storage dtype; per-chunk MXU einsums accumulate in
+    # fp32 via preferred_element_type. Materializing fp32 copies up front
+    # costs 2x HBM on the (replicated-under-CP) K/V — measured at ~6 GB per
+    # device per layer for MLA at 32k (EXPERIMENTS.md §Perf iteration 3).
+    scale = jnp.asarray(D ** -0.5, q.dtype)
+    qr = q.reshape(B, nq, qc, Hkv, G, D) * scale
+    kr = k.reshape(B, nk, kc, Hkv, D)
+    vr = v.reshape(B, nk, kc, Hkv, Dv)
+
+    if kv_limit is not None:
+        kv_lim = jnp.broadcast_to(jnp.asarray(kv_limit), (B,)).astype(jnp.int32)
+    else:
+        kv_lim = None
+
+    def one_q_chunk(qi, qb):                     # qb: (B, qc, Hkv, G, D)
+        qpos = q_offset + qi * qc + jnp.arange(qc)          # (qc,)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            ki, kb, vb = inp                      # kb: (B, kc, Hkv, D)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qb, kb,     # (B,Hkv,G,qc,kc)
+                           preferred_element_type=jnp.float32)
+            if logit_softcap is not None:
+                s = logit_softcap * jnp.tanh(s / logit_softcap)
+            kpos = kv_offset + ki * kc + jnp.arange(kc)     # (kc,)
+            ok = jnp.ones((qc, kc), bool)
+            if causal:
+                ok &= kpos[None, :] <= qpos[:, None]
+            if window is not None:
+                ok &= kpos[None, :] > qpos[:, None] - window
+            mask = ok[None, None, None]
+            if kv_lim is not None:
+                mask = mask & (kpos[None, None, None, None, :]
+                               <= kv_lim[:, None, None, None, None])
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(mask, p, 0.0)
+            corr = jnp.exp(m - m_new)
+            l_new = corr * l + jnp.sum(p, axis=-1)
+            # P is cast to the value dtype for the MXU (standard TPU flash
+            # practice); accumulation stays fp32.
+            acc_new = (corr[..., None] * acc
+                       + jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vb.dtype),
+                                    vb, preferred_element_type=jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, qc), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, qc, Dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.arange(nk), jnp.moveaxis(kr, 1, 0), jnp.moveaxis(vr, 1, 0)))
+        return m, l, acc
+
+    ms, ls, accs = jax.lax.map(
+        lambda t: one_q_chunk(t[0], t[1]),
+        (jnp.arange(nq), jnp.moveaxis(qr, 1, 0)))
+    # (nq, B, Hkv, G, qc[, Dv]) -> (B, Sq, Hq[, Dv])
+    def _restore(x, last=()):
+        x = jnp.moveaxis(x, 0, 3)                 # (B,Hkv,G,nq,qc,...)
+        return x.reshape((B, Hkv, G, Sq) + last)
+    m = _restore(ms)
+    l = _restore(ls)
+    acc = _restore(accs, (Dv,))
+    if return_stats:
+        return acc, l, m                          # (B,Hkv,G,Sq,Dv),(B,Hkv,G,Sq)
+    out = jnp.where(l[..., None] > 0, acc / jnp.maximum(l[..., None], 1e-30), 0)
+    out = jnp.moveaxis(out, 3, 1).reshape(B, Sq, Hq, Dv)
+    return out.astype(q.dtype)
+
+
+def combine_stats(acc, l, m, axis_name: str):
+    """LSE-combine partial attention stats across a mesh axis (flash-decode).
+
+    Each rank holds (acc, l, m) for its KV shard; the result equals attention
+    over the full KV. Used by distributed/decode.py inside shard_map."""
+    m_g = jax.lax.pmax(m, axis_name)
+    corr = jnp.exp(m - m_g)
+    l_g = jax.lax.psum(l * corr, axis_name)
+    acc_g = jax.lax.psum(acc * corr[..., None], axis_name)
+    out = jnp.where(l_g[..., None] > 0,
+                    acc_g / jnp.maximum(l_g[..., None], 1e-30), 0)
+    return out
+
+
+def naive_attention(q, k, v, *, causal=True, window=None, logit_softcap=None,
+                    kv_limit=None):
+    """O(S^2)-memory oracle for tests."""
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qf = q.astype(jnp.float32) * D ** -0.5
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf.reshape(B, Sq, Hkv, G, D),
+                   k.astype(jnp.float32))
+    if logit_softcap is not None:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+    qpos, kpos = jnp.arange(Sq), jnp.arange(k.shape[1])
+    ok = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        ok &= kpos[None] <= qpos[:, None]
+    if window is not None:
+        ok &= kpos[None] > qpos[:, None] - window
+    mask = ok[None, None, None]
+    if kv_limit is not None:
+        lim = jnp.broadcast_to(jnp.asarray(kv_limit), (B,)).astype(jnp.int32)
+        mask = mask & (kpos[None, None, None, None, :]
+                       <= lim[:, None, None, None, None])
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask, p, 0.0)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, Hq, -1).astype(q.dtype)
+
+
+def attention_block(p, x: jnp.ndarray, *, n_heads: int, n_kv_heads: int,
+                    head_dim: int, causal: bool, use_rope: bool,
+                    rope_theta: float, positions: jnp.ndarray,
+                    window: Optional[int] = None,
+                    logit_softcap: Optional[float] = None,
+                    xkv: Optional[jnp.ndarray] = None,
+                    kv_positions: Optional[jnp.ndarray] = None,
+                    cache: Optional[dict] = None,
+                    cache_pos: Optional[jnp.ndarray] = None,
+                    q_chunk: int = 512, kv_chunk: int = 512):
+    """Full attention sub-block: project -> rope -> (cache update) -> flash
+    -> output projection.  Returns (out, new_cache)."""
+    from repro.distributed.ctx import constrain
+    source_kv = x if xkv is None else xkv
+    q, k, v = project_qkv(p, x, source_kv, n_heads, n_kv_heads, head_dim)
+    if use_rope:
+        q = rope(q, positions, rope_theta)
+        kp = positions if kv_positions is None else kv_positions
+        if xkv is None:                       # self-attn: keys share positions
+            k = rope(k, kp, rope_theta)
+    q = constrain("q_seq", constrain("qkv", q))
+    k = constrain("kv_full", constrain("qkv", k))
+    v = constrain("kv_full", constrain("qkv", v))
+    new_cache = None
+    kv_limit = None
+    kv_off = 0
+    if cache is not None:
+        # decode: write this step's k/v at cache_pos, attend to <= cache_pos
+        idx = cache_pos
+        new_k = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), idx, axis=1) \
+            if isinstance(idx, int) else _scatter_kv(cache["k"], k, idx)
+        new_v = _scatter_kv(cache["v"], v, idx) if not isinstance(idx, int) \
+            else jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), idx, axis=1)
+        new_cache = {"k": new_k, "v": new_v}
+        k, v = new_k.astype(q.dtype), new_v.astype(q.dtype)
+        kv_limit = idx
+        causal = False
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          logit_softcap=logit_softcap,
+                          kv_limit=kv_limit, kv_offset=kv_off,
+                          q_chunk=q_chunk, kv_chunk=kv_chunk)
+    B, S = x.shape[:2]
+    out = out.reshape(B, S, -1)
+    return jnp.dot(out, p["wo"].astype(x.dtype)), new_cache
+
+
+def _scatter_kv(cache: jnp.ndarray, kv: jnp.ndarray, pos: jnp.ndarray):
+    """Write one step's kv at (possibly per-batch) position. cache:
+    (B, S, H, D); kv: (B, 1, H, D); pos: scalar or (B,)."""
+    if pos.ndim == 0:
+        return jax.lax.dynamic_update_slice_in_dim(
+            cache, kv.astype(cache.dtype), pos, axis=1)
+    B, S = cache.shape[:2]
+    onehot = jax.nn.one_hot(pos, S, dtype=cache.dtype)        # (B, S)
+    return cache * (1 - onehot[..., None, None]) + \
+        onehot[..., None, None] * kv.astype(cache.dtype)

@@ -1,0 +1,57 @@
+"""Shared building blocks: norms, rotary embeddings, initializers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, shape, scale=None, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) == 2 else shape[-2]
+    scale = (fan_in ** -0.5) if scale is None else scale
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ----------------------------------------------------------------------
+# Norms (computed in fp32, cast back)
+# ----------------------------------------------------------------------
+def init_norm(d: int, kind: str):
+    if kind == "rmsnorm":
+        return {"scale": jnp.zeros((d,), jnp.float32)}       # (1 + scale) form
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def apply_norm(p, x, kind: str, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + eps) * (1.0 + p["scale"])
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# Rotary position embeddings (llama-style rotate-half)
+# ----------------------------------------------------------------------
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, D); positions: (S,) or (B, S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs      # (..., S, half)
+    if ang.ndim == 2:                                           # (S, half)
+        ang = ang[None]                                         # (1, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]                           # (B|1, S, 1, half)
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x: jnp.ndarray, cap: float | None) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)

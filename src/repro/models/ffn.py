@@ -1,0 +1,48 @@
+"""Dense feed-forward variants.
+
+The dense gated FFNs reuse the paper's key fusion idea at the XLA level: gate
+and up projections consume the same activations and XLA fuses the SiLU/GELU
+epilogue; on TPU the Pallas fused kernel handles the grouped (MoE) case while
+the dense case is a single wide GEMM pair that the MXU already saturates."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.blocks import dense_init
+
+
+def init_ffn(key, d: int, f: int, act: str, bias: bool, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    p = {}
+    if act in ("swiglu", "geglu"):
+        p["w_gate"] = dense_init(ks[0], (d, f), dtype=dtype)
+        p["w_up"] = dense_init(ks[1], (d, f), dtype=dtype)
+    else:  # gelu_mlp
+        p["w_up"] = dense_init(ks[1], (d, f), dtype=dtype)
+        if bias:
+            p["b_up"] = jnp.zeros((f,), dtype)
+    p["w_down"] = dense_init(ks[2], (f, d), dtype=dtype)
+    if bias:
+        p["b_down"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_ffn(p, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    dt = x.dtype
+    if act in ("swiglu", "geglu"):
+        g = jnp.dot(x, p["w_gate"].astype(dt))
+        u = jnp.dot(x, p["w_up"].astype(dt))
+        gf = g.astype(jnp.float32)
+        nl = gf * jax.nn.sigmoid(gf) if act == "swiglu" \
+            else jax.nn.gelu(gf, approximate=True)
+        h = (nl * u.astype(jnp.float32)).astype(dt)
+    else:
+        h = jnp.dot(x, p["w_up"].astype(dt))
+        if "b_up" in p:
+            h = h + p["b_up"].astype(dt)
+        h = jax.nn.gelu(h.astype(jnp.float32), approximate=True).astype(dt)
+    out = jnp.dot(h, p["w_down"].astype(dt))
+    if "b_down" in p:
+        out = out + p["b_down"].astype(dt)
+    return out

@@ -1,0 +1,579 @@
+"""Unified LM assembly for all 10 assigned architectures.
+
+A model is a stack of *groups* scanned with ``lax.scan`` (keeps HLO small —
+one group body regardless of depth), plus optional unstacked prefix/suffix
+blocks for heterogeneous leading/trailing layers:
+
+  dense / audio            group = [attn]                      x n_layers
+  moe (deepseek/moonshot)  prefix = [moe_dense] x first_dense,
+                           group = [moe]                       x rest
+  gemma2 (local_global)    group = [attn_local, attn_global]   x n_layers/2
+  vlm (cross every 5)      group = [attn,attn,attn,cross,attn] x n_layers/5
+  ssm (rwkv6)              group = [rwkv]                      x n_layers
+  hybrid (zamba2)          group = [shared_attn, mamba x 6]    x 13
+                           suffix = [shared_attn, mamba x 3]
+                           (shared_attn params: 2 unique blocks, round-robin
+                           via gi %% 2 — exactly 14 applications over 81
+                           mamba layers)
+
+Three entry modes share one code path: ``train`` (full-seq logits -> chunked
+CE), ``prefill`` (build KV caches, last-position logits), ``decode`` (one
+token against a seq_len cache).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.moe_layer import apply_moe, dispatch_config, init_moe_params
+from repro.models import rwkv6 as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models.attention import attention_block, init_attn
+from repro.models.blocks import apply_norm, dense_init, init_norm, softcap
+from repro.models.ffn import apply_ffn, init_ffn
+from repro.models.mla import init_mla, mla_block
+
+
+class RunConfig(NamedTuple):
+    """Execution options orthogonal to the architecture."""
+    compute_dtype: Any = jnp.float32
+    param_dtype: Any = jnp.float32
+    moe_impl: str = "xla"            # pallas | xla | dense
+    ep: bool = False                 # EP all-to-all dispatch over 'model' axis
+    ep_axis: str = "model"
+    remat: bool = False
+    q_chunk: int = 512               # 0 = full sequence (CP / decode)
+    kv_chunk: int = 512
+    loss_chunk: int = 1024
+    fuse_gate_up: bool = True
+    fold_combine: bool = True
+    capacity_factor: float = 2.0     # EP buffer headroom
+    unroll: bool = False             # python-loop the layer stack (roofline
+                                     # validation: cost_analysis counts scan
+                                     # bodies once; unrolled counts all)
+
+
+# ----------------------------------------------------------------------
+# Group structure
+# ----------------------------------------------------------------------
+def group_structure(cfg: ModelConfig):
+    """-> (prefix_kinds, body_kinds, n_groups, suffix_kinds)."""
+    L = cfg.n_layers
+    if cfg.family == "hybrid":
+        per = cfg.attn_every
+        n_groups = (L - 3) // per                        # 13 for zamba2-7b
+        rem = L - n_groups * per                         # 3
+        return ([], ["shared_attn"] + ["mamba"] * per, n_groups,
+                ["shared_attn"] + ["mamba"] * rem)
+    if cfg.family == "ssm":
+        return [], ["rwkv"], L, []
+    if cfg.family == "vlm":
+        per = cfg.cross_attn_every
+        body = ["attn"] * per
+        body[per - 2] = "cross"                          # 4th of each 5
+        return [], body, L // per, []
+    if cfg.layer_pattern == "local_global":
+        return [], ["attn_local", "attn_global"], L // 2, []
+    if cfg.is_moe:
+        nd = cfg.moe.first_dense_layers
+        return ["moe_dense"] * nd, ["moe"], L - nd, []
+    return [], ["attn"], L, []
+
+
+# ----------------------------------------------------------------------
+# Per-block init
+# ----------------------------------------------------------------------
+def init_block(key, cfg: ModelConfig, kind: str, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {}
+    if kind in ("attn", "attn_local", "attn_global", "cross",
+                "moe", "moe_dense", "shared_attn"):
+        p["norm1"] = init_norm(d, cfg.norm)
+        p["norm2"] = init_norm(d, cfg.norm)
+        if cfg.post_block_norm:
+            p["post_norm1"] = init_norm(d, cfg.norm)
+            p["post_norm2"] = init_norm(d, cfg.norm)
+        if cfg.mla is not None and kind in ("moe", "moe_dense"):
+            p["attn"] = init_mla(ks[0], d, cfg.n_heads, cfg.mla, dtype)
+        else:
+            p["attn"] = init_attn(ks[0], d, cfg.n_heads, cfg.n_kv_heads,
+                                  cfg.head_dim, cfg.qkv_bias, dtype)
+        if kind == "moe":
+            p["moe"] = init_moe_params(ks[1], cfg.moe, d, dtype)
+        elif kind == "moe_dense":
+            f = cfg.moe.d_ff_dense or 4 * d
+            p["ffn"] = init_ffn(ks[1], d, f, cfg.act, cfg.mlp_bias, dtype)
+        else:
+            p["ffn"] = init_ffn(ks[1], d, cfg.d_ff, cfg.act, cfg.mlp_bias,
+                                dtype)
+    elif kind == "rwkv":
+        p["norm1"] = init_norm(d, cfg.norm)
+        p["norm2"] = init_norm(d, cfg.norm)
+        p["tm"] = rwkv_mod.init_time_mix(ks[0], d, cfg.rwkv, dtype)
+        p["cm"] = rwkv_mod.init_channel_mix(ks[1], d, cfg.d_ff, dtype)
+    elif kind == "mamba":
+        p["norm1"] = init_norm(d, cfg.norm)
+        p["ssm"] = ssm_mod.init_ssm(ks[0], d, cfg.ssm, dtype)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def init_group(key, cfg: ModelConfig, kinds, dtype):
+    ks = jax.random.split(key, len(kinds))
+    return {f"b{i}": init_block(ks[i], cfg, kind, dtype)
+            for i, kind in enumerate(kinds)}
+
+
+def init_params(cfg: ModelConfig, key, param_dtype=jnp.float32):
+    prefix, body, n_groups, suffix = group_structure(cfg)
+    ks = jax.random.split(key, 8)
+    p: dict = {}
+    d = cfg.d_model
+    if cfg.encoder_only:
+        p["mask_emb"] = (jax.random.normal(ks[0], (d,)) * 0.02
+                         ).astype(param_dtype)
+    else:
+        p["embed"] = (jax.random.normal(ks[0], (cfg.vocab_size, d)) * 0.02
+                      ).astype(param_dtype)
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(ks[1], (d, cfg.vocab_size), dtype=param_dtype)
+    p["final_norm"] = init_norm(d, cfg.norm)
+    if cfg.family == "ssm":
+        p["ln0"] = init_norm(d, cfg.norm)
+    if prefix:
+        kp = jax.random.split(ks[2], len(prefix))
+        p["prefix"] = [init_block(kp[i], cfg, prefix[i], param_dtype)
+                       for i in range(len(prefix))]
+    kg = jax.random.split(ks[3], n_groups)
+    p["body"] = jax.vmap(
+        lambda k: init_group(k, cfg, tuple(body), param_dtype))(kg)
+    if suffix:
+        kS = jax.random.split(ks[4], len(suffix))
+        p["suffix"] = [init_block(kS[i], cfg, suffix[i], param_dtype)
+                       for i in range(len(suffix))]
+    if cfg.attn_every:  # zamba2 shared blocks (2 unique, round-robin)
+        ksh = jax.random.split(ks[5], cfg.n_shared_attn_blocks)
+        p["shared"] = jax.vmap(
+            lambda k: init_block(k, cfg, "shared_attn", param_dtype))(ksh)
+    return p
+
+
+# ----------------------------------------------------------------------
+# Per-block apply
+# ----------------------------------------------------------------------
+def _attn_kw(cfg: ModelConfig, kind: str, rc: RunConfig):
+    window = cfg.local_window if kind == "attn_local" else None
+    return dict(n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.head_dim, causal=cfg.causal,
+                use_rope=cfg.use_rope, rope_theta=cfg.rope_theta,
+                window=window, logit_softcap=cfg.attn_logit_softcap,
+                q_chunk=rc.q_chunk or 10 ** 9, kv_chunk=rc.kv_chunk or 10 ** 9)
+
+
+def _apply_moe_ffn(bp, x, cfg: ModelConfig, rc: RunConfig, mode: str):
+    dcfg = dispatch_config(cfg.moe, impl=rc.moe_impl,
+                           fuse_gate_up=rc.fuse_gate_up,
+                           fold_combine=rc.fold_combine)
+    if rc.ep:
+        from repro.core.distributed import apply_moe_ep
+        layout = "replicated" if mode == "decode" else "sharded"
+        return apply_moe_ep(bp["moe"], x, dcfg, axis=rc.ep_axis,
+                            capacity_factor=rc.capacity_factor,
+                            token_layout=layout)
+    return apply_moe(bp["moe"], x, dcfg)
+
+
+def apply_block(bp, x, kind: str, cfg: ModelConfig, rc: RunConfig, *,
+                positions, mode: str, cache=None, cache_pos=None,
+                image_embeds=None):
+    """Returns (x, new_cache, aux)."""
+    aux = {}
+    new_cache = None
+    dt = x.dtype
+
+    if kind == "rwkv":
+        h = apply_norm(bp["norm1"], x, cfg.norm)
+        c_tm = cache["tm"] if cache is not None else None
+        o, nc_tm = rwkv_mod.time_mix(bp["tm"], h, cfg.rwkv, cache=c_tm)
+        x = x + o.astype(dt)
+        h = apply_norm(bp["norm2"], x, cfg.norm)
+        c_cm = cache["cm"] if cache is not None else None
+        o, nc_cm = rwkv_mod.channel_mix(bp["cm"], h, cache=c_cm)
+        x = x + o.astype(dt)
+        if cache is not None:
+            new_cache = {"tm": nc_tm, "cm": nc_cm}
+        return x, new_cache, aux
+
+    if kind == "mamba":
+        h = apply_norm(bp["norm1"], x, cfg.norm)
+        o, new_cache = ssm_mod.ssm_block(bp["ssm"], h, cfg.ssm, cache=cache)
+        return x + o.astype(dt), new_cache, aux
+
+    # --- attention-style blocks ---
+    h = apply_norm(bp["norm1"], x, cfg.norm)
+    if cfg.mla is not None and kind in ("moe", "moe_dense"):
+        o, kv_cache = mla_block(
+            bp["attn"], h, n_heads=cfg.n_heads, mla=cfg.mla,
+            positions=positions,
+            cache=cache.get("kv") if (cache is not None
+                                      and mode == "decode") else None,
+            cache_pos=cache_pos,
+            q_chunk=(10 ** 9 if mode == "decode" else rc.q_chunk or 10 ** 9),
+            kv_chunk=(10 ** 9 if mode == "decode"
+                      else rc.kv_chunk or 10 ** 9))
+        if mode == "prefill":                 # write full-seq latent cache
+            kv_cache = _prefill_mla_cache(bp["attn"], h, cfg, cache["kv"],
+                                          positions)
+    elif kind == "cross":
+        if mode == "decode":
+            # reuse image K/V built at prefill; no causal structure
+            kv_cache = cache["kv"]
+            o = _cross_decode(bp["attn"], h, cache["kv"], cfg, rc)
+        else:
+            img = image_embeds.astype(dt)
+            o, _ = attention_block(
+                bp["attn"], h, **{**_attn_kw(cfg, kind, rc),
+                                  "causal": False, "use_rope": False},
+                positions=positions, xkv=img)
+            kv_cache = None
+            if mode == "prefill":
+                from repro.models.attention import project_qkv
+                _, kc, vc = project_qkv(bp["attn"], h, img, cfg.n_heads,
+                                        cfg.n_kv_heads, cfg.head_dim)
+                kv_cache = {"k": kc, "v": vc}
+    else:
+        kw = _attn_kw(cfg, kind, rc)
+        if mode == "decode":
+            # full-KV attention (no chunk scan): scores stay sharded on the
+            # cache's sequence axis and GSPMD emits the flash-decode-style
+            # psum combine; a chunked scan would all-gather the cache.
+            kw = dict(kw, q_chunk=10 ** 9, kv_chunk=10 ** 9)
+            o, kv_cache = attention_block(
+                bp["attn"], h, **kw, positions=positions,
+                cache=cache["kv"], cache_pos=cache_pos)
+        elif mode == "prefill":
+            o, _ = attention_block(bp["attn"], h, **kw, positions=positions)
+            kv_cache = _prefill_kv_cache(bp["attn"], h, cfg, cache["kv"],
+                                         positions)
+        else:
+            o, kv_cache = attention_block(bp["attn"], h, **kw,
+                                          positions=positions)
+    if cfg.post_block_norm:
+        o = apply_norm(bp["post_norm1"], o, cfg.norm)
+    x = x + o.astype(dt)
+
+    h = apply_norm(bp["norm2"], x, cfg.norm)
+    if kind == "moe":
+        o, moe_aux = _apply_moe_ffn(bp, h, cfg, rc, mode)
+        aux.update(moe_aux)
+    else:
+        o = apply_ffn(bp["ffn"], h, cfg.act)
+    if cfg.post_block_norm:
+        o = apply_norm(bp["post_norm2"], o, cfg.norm)
+    x = x + o.astype(dt)
+
+    if cache is not None:
+        new_cache = {"kv": kv_cache}
+    return x, new_cache, aux
+
+
+def _cross_decode(p, h, kv_cache, cfg: ModelConfig, rc: RunConfig):
+    """Decode-time cross attention against cached image K/V."""
+    from repro.models.attention import flash_attention
+    B, S, _ = h.shape
+    q = jnp.dot(h, p["wq"].astype(h.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(h.dtype)
+    q = q.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    out = flash_attention(q, kv_cache["k"].astype(h.dtype),
+                          kv_cache["v"].astype(h.dtype), causal=False,
+                          q_chunk=0 or 10 ** 9, kv_chunk=10 ** 9)
+    return jnp.dot(out.reshape(B, S, -1), p["wo"].astype(h.dtype))
+
+
+def _prefill_kv_cache(p, h, cfg: ModelConfig, cache_kv, positions):
+    """Project K/V for the whole prompt and write into the cache at 0."""
+    from repro.models.attention import project_qkv
+    from repro.models.blocks import rope
+    _, k, v = project_qkv(p, h, h, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.use_rope:
+        k = rope(k, positions, cfg.rope_theta)
+    k = jax.lax.dynamic_update_slice(
+        cache_kv["k"], k.astype(cache_kv["k"].dtype), (0, 0, 0, 0))
+    v = jax.lax.dynamic_update_slice(
+        cache_kv["v"], v.astype(cache_kv["v"].dtype), (0, 0, 0, 0))
+    return {"k": k, "v": v}
+
+
+def _prefill_mla_cache(p, h, cfg: ModelConfig, cache_kv, positions):
+    from repro.models.mla import _latent
+    c_kv, k_rope = _latent(p, h, cfg.mla, positions)
+    ckv = jax.lax.dynamic_update_slice(
+        cache_kv["ckv"], c_kv.astype(cache_kv["ckv"].dtype), (0, 0, 0))
+    kr = jax.lax.dynamic_update_slice(
+        cache_kv["kr"], k_rope.astype(cache_kv["kr"].dtype), (0, 0, 0))
+    return {"ckv": ckv, "kr": kr}
+
+
+# ----------------------------------------------------------------------
+# Cache init
+# ----------------------------------------------------------------------
+def _block_cache(cfg: ModelConfig, kind: str, batch: int, capacity: int,
+                 dtype):
+    if kind in ("attn", "attn_local", "attn_global", "shared_attn"):
+        vd = cfg.head_dim
+        return {"kv": {
+            "k": jnp.zeros((batch, capacity, cfg.n_kv_heads, cfg.head_dim),
+                           dtype),
+            "v": jnp.zeros((batch, capacity, cfg.n_kv_heads, vd), dtype)}}
+    if kind in ("moe", "moe_dense"):
+        if cfg.mla is not None:
+            return {"kv": {
+                "ckv": jnp.zeros((batch, capacity, cfg.mla.kv_lora_rank),
+                                 dtype),
+                "kr": jnp.zeros((batch, capacity, cfg.mla.qk_rope_head_dim),
+                                dtype)}}
+        return _block_cache(cfg, "attn", batch, capacity, dtype)
+    if kind == "cross":
+        return {"kv": {
+            "k": jnp.zeros((batch, cfg.n_image_tokens, cfg.n_kv_heads,
+                            cfg.head_dim), dtype),
+            "v": jnp.zeros((batch, cfg.n_image_tokens, cfg.n_kv_heads,
+                            cfg.head_dim), dtype)}}
+    if kind == "rwkv":
+        return rwkv_mod.init_rwkv_cache(batch, cfg.d_model, cfg.rwkv, dtype)
+    if kind == "mamba":
+        return ssm_mod.init_ssm_cache(batch, cfg.d_model, cfg.ssm, dtype)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int,
+               dtype=jnp.float32):
+    prefix, body, n_groups, suffix = group_structure(cfg)
+    mk = lambda kind: _block_cache(cfg, kind, batch, capacity, dtype)
+    cache = {}
+    if prefix:
+        cache["prefix"] = [mk(k) for k in prefix]
+    one = {f"b{i}": mk(k) for i, k in enumerate(body)}
+    cache["body"] = jax.tree.map(
+        lambda l: jnp.broadcast_to(l[None], (n_groups,) + l.shape).copy(), one)
+    if suffix:
+        cache["suffix"] = [mk(k) for k in suffix]
+    return cache
+
+
+# ----------------------------------------------------------------------
+# Full forward
+# ----------------------------------------------------------------------
+def _embed(params, cfg: ModelConfig, batch, dt):
+    if cfg.encoder_only:
+        x = batch["features"].astype(dt)
+        if "mask" in batch:
+            x = jnp.where(batch["mask"][..., None],
+                          params["mask_emb"].astype(dt), x)
+        return x
+    x = params["embed"][batch["tokens"]].astype(dt)
+    if cfg.emb_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+    return x
+
+
+def _head_matrix(params, cfg: ModelConfig):
+    return params["embed"].T if cfg.tie_embeddings else params["head"]
+
+
+def forward(params, cfg: ModelConfig, rc: RunConfig, batch: dict,
+            mode: str = "train", cache=None, pos=None):
+    """Returns (out, new_cache, aux):
+    train  -> out = final hidden states (B, S, d)
+    prefill-> out = last-position logits (B, V)
+    decode -> out = logits (B, V)
+    """
+    from repro.distributed.ctx import constrain
+    prefix, body, n_groups, suffix = group_structure(cfg)
+    dt = rc.compute_dtype
+    x = constrain("residual", _embed(params, cfg, batch, dt))
+    B, S = x.shape[:2]
+    if cfg.family == "ssm":
+        x = apply_norm(params["ln0"], x, cfg.norm)
+
+    if mode == "decode":
+        positions = jnp.full((1,), pos, jnp.int32)
+        cache_pos = pos
+    else:
+        positions = jnp.arange(S, dtype=jnp.int32)
+        cache_pos = None
+
+    image_embeds = batch.get("image_embeds")
+    aux_acc = {}
+
+    def merge_aux(a, b):
+        return {k: a.get(k, 0.0) + v for k, v in b.items()} if b else a
+
+    def run_unstacked(x, blocks, kinds, caches):
+        new_caches = []
+        nonlocal aux_acc
+        for i, kind in enumerate(kinds):
+            c = caches[i] if caches is not None else None
+            x, nc, aux = apply_block(
+                blocks[i], x, kind, cfg, rc, positions=positions, mode=mode,
+                cache=c, cache_pos=cache_pos, image_embeds=image_embeds)
+            aux_acc = merge_aux(aux_acc, aux)
+            new_caches.append(nc)
+        return x, new_caches
+
+    new_cache: dict = {}
+    if prefix:
+        x, ncs = run_unstacked(x, params["prefix"], prefix,
+                               cache.get("prefix") if cache else None)
+        if cache is not None:
+            new_cache["prefix"] = ncs
+
+    shared = params.get("shared")
+
+    def group_body(x, gp, gi, gcache):
+        gaux = {}
+        ncache = {}
+        for i, kind in enumerate(body):
+            bp = gp[f"b{i}"]
+            if kind == "shared_attn":
+                bp = jax.tree.map(
+                    lambda p: p[gi % cfg.n_shared_attn_blocks], shared)
+            c = gcache[f"b{i}"] if gcache is not None else None
+            x, nc, aux = apply_block(
+                bp, x, kind, cfg, rc, positions=positions, mode=mode,
+                cache=c, cache_pos=cache_pos, image_embeds=image_embeds)
+            gaux = {k: gaux.get(k, 0.0) + v for k, v in aux.items()}
+            ncache[f"b{i}"] = nc
+        from repro.distributed.ctx import constrain as _c
+        return _c("residual", x), ncache, gaux
+
+    def scan_fn(carry, xs):
+        x, aux_c = carry
+        if cache is not None:
+            gp, gi, gcache = xs
+        else:
+            gp, gi = xs
+            gcache = None
+        if rc.remat:
+            x, ncache, gaux = jax.checkpoint(
+                functools.partial(group_body),
+                policy=jax.checkpoint_policies.nothing_saveable,
+            )(x, gp, gi, gcache)
+        else:
+            x, ncache, gaux = group_body(x, gp, gi, gcache)
+        aux_c = {k: aux_c.get(k, 0.0) + v for k, v in gaux.items()} \
+            if gaux else aux_c
+        return (x, aux_c), ncache
+
+    aux0 = {"lb_loss": jnp.zeros((), jnp.float32),
+            "router_z": jnp.zeros((), jnp.float32)} \
+        if (cfg.is_moe and "moe" in body) else {}
+    gi_arr = jnp.arange(n_groups, dtype=jnp.int32)
+    if rc.unroll:
+        aux_acc2 = aux0
+        ncaches = []
+        for gi in range(n_groups):
+            gp = jax.tree.map(lambda p: p[gi], params["body"])
+            gcache = jax.tree.map(lambda c: c[gi], cache["body"]) \
+                if cache is not None else None
+            x, nc, gaux = group_body(x, gp, jnp.int32(gi), gcache)
+            aux_acc2 = {k: aux_acc2.get(k, 0.0) + v for k, v in gaux.items()} \
+                if gaux else aux_acc2
+            ncaches.append(nc)
+        body_caches = jax.tree.map(lambda *ls: jnp.stack(ls), *ncaches) \
+            if cache is not None else None
+    else:
+        xs = (params["body"], gi_arr) if cache is None \
+            else (params["body"], gi_arr, cache["body"])
+        with jax.named_scope("layer_stack"):
+            (x, aux_acc2), body_caches = jax.lax.scan(scan_fn, (x, aux0), xs)
+    aux_acc = merge_aux(aux_acc, aux_acc2)
+    if cache is not None:
+        new_cache["body"] = body_caches
+
+    if suffix:
+        x, ncs = run_unstacked(x, params["suffix"], suffix,
+                               cache.get("suffix") if cache else None)
+        if cache is not None:
+            new_cache["suffix"] = ncs
+
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+
+    if mode == "train":
+        return x, None, aux_acc
+
+    w_head = _head_matrix(params, cfg).astype(dt)
+    if mode == "prefill":
+        x_last = x[:, -1]
+    else:
+        x_last = x[:, 0]
+    logits = jnp.dot(x_last, w_head).astype(jnp.float32)
+    logits = softcap(logits, cfg.final_logit_softcap)
+    return logits, (new_cache if cache is not None else None), aux_acc
+
+
+# ----------------------------------------------------------------------
+# Loss (chunked over sequence; logits never fully materialized)
+# ----------------------------------------------------------------------
+def chunked_ce(x, w_head, labels, valid, *, chunk: int,
+               final_cap: Optional[float]):
+    """x: (B, S, d); labels/valid: (B, S). Returns (sum_ce, n_valid)."""
+    B, S, d = x.shape
+    c = min(chunk, S)
+    while S % c:
+        c -= 1
+    nc = S // c
+    # STRIDED chunks (token s -> chunk s % nc): under CP the sequence dim is
+    # sharded over 'model'; strided chunking keeps every rank active in every
+    # scan step (contiguous chunks would serialize rank-by-rank).
+    xs = (jnp.moveaxis(x.reshape(B, c, nc, d), 2, 0),
+          jnp.moveaxis(labels.reshape(B, c, nc), 2, 0),
+          jnp.moveaxis(valid.reshape(B, c, nc), 2, 0))
+
+    @functools.partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def body(carry, inp):
+        xc, yc, vc = inp
+        logits = jnp.dot(xc, w_head).astype(jnp.float32)
+        logits = softcap(logits, final_cap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        ce = jnp.where(vc, lse - gold, 0.0)
+        return (carry[0] + jnp.sum(ce), carry[1] + jnp.sum(vc)), None
+
+    (tot, n), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)), xs)
+    return tot, n
+
+
+def loss_fn(params, cfg: ModelConfig, rc: RunConfig, batch: dict):
+    """Next-token CE (LMs) or masked-prediction CE (encoder). Returns
+    (loss, metrics)."""
+    h, _, aux = forward(params, cfg, rc, batch, mode="train")
+    w_head = _head_matrix(params, cfg).astype(h.dtype)
+    if cfg.encoder_only:
+        labels = batch["labels"]
+        valid = batch["mask"]
+        tot, n = chunked_ce(h, w_head, labels, valid, chunk=rc.loss_chunk,
+                            final_cap=cfg.final_logit_softcap)
+    else:
+        tokens = batch["tokens"]
+        labels = tokens[:, 1:]
+        valid = jnp.ones_like(labels, bool)
+        tot, n = chunked_ce(h[:, :-1], w_head, labels, valid,
+                            chunk=rc.loss_chunk,
+                            final_cap=cfg.final_logit_softcap)
+    loss = tot / jnp.maximum(n, 1)
+    metrics = {"ce": loss, "tokens": n.astype(jnp.float32)}
+    if aux:
+        metrics.update(aux)
+        loss = loss + 0.01 * aux.get("lb_loss", 0.0) \
+            + 1e-4 * aux.get("router_z", 0.0)
+    return loss, metrics

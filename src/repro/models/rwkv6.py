@@ -1,0 +1,137 @@
+"""RWKV6 "Finch": data-dependent-decay linear attention + channel mix.
+
+Time-mix recurrence (per head, k/v head size n):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    o_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+with the Finch signature feature: w_t = exp(-exp(w0 + lora(x~_t))) is
+DATA-DEPENDENT per channel.  Token-shift mixing coefficients are kept static
+per projection (the full ddlerp stack is simplified; noted in DESIGN.md).
+
+Implementation: exact ``lax.scan`` over time with fp32 state (the recurrence
+is a rank-1 update — memory-bound VPU work on TPU; the chunked-GLA
+reformulation is the documented optimization path in EXPERIMENTS.md §Perf).
+Decode is the same recurrence applied to a single step with O(1) state.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RWKVConfig
+from repro.models.blocks import apply_norm, dense_init, init_norm
+
+
+def init_time_mix(key, d_model: int, rwkv: RWKVConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 9)
+    n = rwkv.head_size
+    H = d_model // n
+    return {
+        "mu": 0.5 * jnp.ones((5, d_model), jnp.float32),   # r,k,v,w,g shifts
+        "w0": jnp.full((d_model,), -1.0, jnp.float32),
+        "w_lora_a": dense_init(ks[0], (d_model, rwkv.decay_lora), dtype=dtype),
+        "w_lora_b": dense_init(ks[1], (rwkv.decay_lora, d_model),
+                               scale=0.01, dtype=dtype),
+        "u": jnp.zeros((H, n), jnp.float32),               # per-channel bonus
+        "wr": dense_init(ks[2], (d_model, d_model), dtype=dtype),
+        "wk": dense_init(ks[3], (d_model, d_model), dtype=dtype),
+        "wv": dense_init(ks[4], (d_model, d_model), dtype=dtype),
+        "wg": dense_init(ks[5], (d_model, d_model), dtype=dtype),
+        "ln_x": init_norm(d_model, "layernorm"),           # per-head group norm
+        "wo": dense_init(ks[6], (d_model, d_model), dtype=dtype),
+    }
+
+
+def init_channel_mix(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    return {
+        "mu": 0.5 * jnp.ones((2, d_model), jnp.float32),   # k, r shifts
+        "wk": dense_init(ks[0], (d_model, d_ff), dtype=dtype),
+        "wv": dense_init(ks[1], (d_ff, d_model), dtype=dtype),
+        "wr": dense_init(ks[2], (d_model, d_model), dtype=dtype),
+    }
+
+
+def _token_shift(x: jnp.ndarray, last: Optional[jnp.ndarray]):
+    """x_{t-1} (zero / cached at t=0). x: (B,S,d); last: (B,1,d) or None."""
+    prev = jnp.zeros_like(x[:, :1]) if last is None else last.astype(x.dtype)
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def time_mix(p, x: jnp.ndarray, rwkv: RWKVConfig, *,
+             cache: Optional[dict] = None):
+    """Returns (out, new_cache). cache: {"shift": (B,1,d),
+    "state": (B,H,n,n) fp32}."""
+    B, S, d = x.shape
+    n = rwkv.head_size
+    H = d // n
+    from repro.distributed.ctx import constrain
+    xx = _token_shift(x, cache["shift"] if cache else None)
+    mix = lambda i: x + (xx - x) * p["mu"][i].astype(x.dtype)
+    r = constrain("heads4",
+                  jnp.dot(mix(0), p["wr"].astype(x.dtype)).reshape(B, S, H, n))
+    k = constrain("heads4",
+                  jnp.dot(mix(1), p["wk"].astype(x.dtype)).reshape(B, S, H, n))
+    v = constrain("heads4",
+                  jnp.dot(mix(2), p["wv"].astype(x.dtype)).reshape(B, S, H, n))
+    # Finch: data-dependent decay
+    xw = mix(3)
+    dd = p["w0"] + jnp.dot(jnp.tanh(jnp.dot(xw, p["w_lora_a"].astype(x.dtype))
+                                    ), p["w_lora_b"].astype(x.dtype)
+                           ).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(dd)).reshape(B, S, H, n)            # decay in (0,1)
+    g = jax.nn.silu(jnp.dot(mix(4), p["wg"].astype(x.dtype)
+                            ).astype(jnp.float32))
+
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    u = p["u"][None]                                          # (1,H,n)
+
+    def step(S_, inp):
+        r_t, k_t, v_t, w_t = inp                              # (B,H,n)
+        kv = k_t[..., :, None] * v_t[..., None, :]            # (B,H,n,n)
+        o = jnp.einsum("bhn,bhnm->bhm", r_t, S_ + u[..., None] * kv)
+        S_new = w_t[..., None] * S_ + kv
+        return S_new, o
+
+    S0 = (jnp.zeros((B, H, n, n), jnp.float32) if cache is None
+          else cache["state"].astype(jnp.float32))
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (rf, kf, vf, w))
+    S_fin, o = jax.lax.scan(step, S0, xs)
+    o = jnp.moveaxis(o, 0, 1).reshape(B, S, d)                # (B,S,d)
+    o = apply_norm(p["ln_x"], o.astype(x.dtype), "layernorm") \
+        .astype(jnp.float32) * g
+    out = jnp.dot(o.astype(x.dtype), p["wo"].astype(x.dtype))
+    new_cache = None
+    if cache is not None:
+        new_cache = {"shift": x[:, -1:].astype(cache["shift"].dtype),
+                     "state": S_fin}
+    return out, new_cache
+
+
+def channel_mix(p, x: jnp.ndarray, *, cache: Optional[dict] = None):
+    """Returns (out, new_cache). cache: {"shift": (B,1,d)}."""
+    xx = _token_shift(x, cache["shift"] if cache else None)
+    mix = lambda i: x + (xx - x) * p["mu"][i].astype(x.dtype)
+    k = jnp.dot(mix(0), p["wk"].astype(x.dtype))
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    kv = jnp.dot(k, p["wv"].astype(x.dtype))
+    r = jax.nn.sigmoid(jnp.dot(mix(1), p["wr"].astype(x.dtype)
+                               ).astype(jnp.float32))
+    out = (r * kv.astype(jnp.float32)).astype(x.dtype)
+    new_cache = ({"shift": x[:, -1:].astype(cache["shift"].dtype)}
+                 if cache is not None else None)
+    return out, new_cache
+
+
+def init_rwkv_cache(batch: int, d_model: int, rwkv: RWKVConfig,
+                    dtype=jnp.float32):
+    n = rwkv.head_size
+    H = d_model // n
+    return {
+        "tm": {"shift": jnp.zeros((batch, 1, d_model), dtype),
+               "state": jnp.zeros((batch, H, n, n), jnp.float32)},
+        "cm": {"shift": jnp.zeros((batch, 1, d_model), dtype)},
+    }

@@ -1,0 +1,161 @@
+"""Mamba2 (SSD) mixer: chunked train/prefill recurrence + O(1) decode step.
+
+The SSD scan follows the Mamba2 paper's chunked algorithm: quadratic
+attention-like computation inside fixed-size chunks, a (heads, head_dim,
+d_state) state carried across chunks by ``lax.scan``.  Per-head compute is
+independent, which is what lets the distributed layer shard heads across the
+``model`` mesh axis (TP) for the ssm/hybrid architectures."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models.blocks import dense_init, init_norm, apply_norm
+
+
+def init_ssm(key, d_model: int, ssm: SSMConfig, dtype=jnp.float32):
+    d_in = ssm.expand * d_model
+    n_heads = d_in // ssm.head_dim
+    G, N = ssm.n_groups, ssm.d_state
+    conv_dim = d_in + 2 * G * N
+    ks = jax.random.split(key, 5)
+    return {
+        # x -> [z, xBC, dt]
+        "in_proj": dense_init(
+            ks[0], (d_model, 2 * d_in + 2 * G * N + n_heads), dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (ssm.conv_kernel, conv_dim))
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "out_norm": init_norm(d_in, "rmsnorm"),
+        "out_proj": dense_init(ks[3], (d_in, d_model), dtype=dtype),
+    }
+
+
+def _split_proj(p, x, ssm: SSMConfig, d_model: int):
+    d_in = ssm.expand * d_model
+    n_heads = d_in // ssm.head_dim
+    G, N = ssm.n_groups, ssm.d_state
+    zxbcdt = jnp.dot(x, p["in_proj"].astype(x.dtype))
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in:d_in + d_in + 2 * G * N]
+    dt = zxbcdt[..., -n_heads:]
+    return z, xbc, dt
+
+
+def _causal_conv(p, xbc, conv_state: Optional[jnp.ndarray]):
+    """Depthwise causal conv1d; returns (out, new_conv_state)."""
+    K = p["conv_w"].shape[0]
+    if conv_state is None:
+        pad = jnp.zeros_like(xbc[:, : K - 1])
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)                  # (B, S+K-1, C)
+    out = sum(xp[:, i:i + xbc.shape[1]] * p["conv_w"][i].astype(xbc.dtype)
+              for i in range(K))
+    out = jax.nn.silu((out + p["conv_b"].astype(xbc.dtype)
+                       ).astype(jnp.float32)).astype(xbc.dtype)
+    new_state = xp[:, xbc.shape[1]:]                          # last K-1 inputs
+    return out, new_state
+
+
+def ssd_chunked(xh, dt, B_, C_, a, chunk: int,
+                state0: Optional[jnp.ndarray] = None):
+    """SSD chunked scan.
+    xh: (B,S,H,P); dt: (B,S,H) (post-softplus); B_/C_: (B,S,G,N); a: (H,)<0.
+    Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    Bb, S, H, P = xh.shape
+    G, N = B_.shape[2], B_.shape[3]
+    L = min(chunk, S)
+    while S % L:
+        L -= 1
+    nc = S // L
+    rep = H // G
+
+    xc = xh.reshape(Bb, nc, L, H, P).astype(jnp.float32)
+    dtc = dt.reshape(Bb, nc, L, H).astype(jnp.float32)
+    Bc = B_.reshape(Bb, nc, L, G, N).astype(jnp.float32)
+    Cc = C_.reshape(Bb, nc, L, G, N).astype(jnp.float32)
+    Bh = jnp.repeat(Bc, rep, axis=3)                          # (B,nc,L,H,N)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    dA = dtc * a[None, None, None, :]                         # (B,nc,L,H) <=0
+    cum = jnp.cumsum(dA, axis=2)                              # inclusive
+
+    def chunk_step(state, inp):
+        xb, dtb, Bb_, Cb_, dAb, cumb = inp                    # (B,L,...)
+        # intra-chunk (quadratic within L)
+        seg = cumb[:, :, None, :] - cumb[:, None, :, :]       # (B,L,L,H) i-j
+        ii, jj = jnp.meshgrid(jnp.arange(L), jnp.arange(L), indexing="ij")
+        causal = (jj <= ii)[None, :, :, None]
+        decay = jnp.where(causal, jnp.exp(jnp.minimum(seg, 0.0)), 0.0)
+        sc = jnp.einsum("blhn,bmhn->blmh", Cb_, Bb_)          # (B,L,L,H)
+        mat = sc * decay
+        xdt = xb * dtb[..., None]                             # (B,L,H,P)
+        y_intra = jnp.einsum("blmh,bmhp->blhp", mat, xdt)
+        # inter-chunk (carry-in state)
+        state_decay = jnp.exp(cumb)                           # (B,L,H)
+        y_inter = jnp.einsum("blhn,bhpn->blhp", Cb_, state) \
+            * state_decay[..., None]
+        # state update
+        tail = jnp.exp(cumb[:, -1:, :] - cumb)                # (B,L,H)
+        new_state = state * jnp.exp(cumb[:, -1])[..., None, None] \
+            + jnp.einsum("blhn,blhp->bhpn", Bb_ * tail[..., None], xdt)
+        return new_state, y_intra + y_inter
+
+    state0 = jnp.zeros((Bb, H, P, N), jnp.float32) if state0 is None \
+        else state0.astype(jnp.float32)
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (xc, dtc, Bh, Ch, dA, cum))
+    final, ys = jax.lax.scan(chunk_step, state0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bb, S, H, P)
+    return y, final
+
+
+def ssm_block(p, x: jnp.ndarray, ssm: SSMConfig, *,
+              cache: Optional[dict] = None):
+    """Mamba2 mixer. Returns (out, new_cache).
+    cache: {"conv": (B,K-1,C), "state": (B,H,P,N)} or None."""
+    B, S, d_model = x.shape
+    d_in = ssm.expand * d_model
+    H, P = d_in // ssm.head_dim, ssm.head_dim
+    G, N = ssm.n_groups, ssm.d_state
+
+    from repro.distributed.ctx import constrain
+    z, xbc, dt = _split_proj(p, x, ssm, d_model)
+    xbc = constrain("channels3", xbc)
+    conv_state = cache["conv"] if cache is not None else None
+    xbc, new_conv = _causal_conv(p, xbc, conv_state)
+    xh = constrain("heads4", xbc[..., :d_in].reshape(B, S, H, P))
+    B_ = xbc[..., d_in:d_in + G * N].reshape(B, S, G, N)
+    C_ = xbc[..., d_in + G * N:].reshape(B, S, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])
+    a = -jnp.exp(p["a_log"])
+
+    state0 = cache["state"] if cache is not None else None
+    y, final_state = ssd_chunked(xh, dt, B_, C_, a, ssm.chunk, state0)
+    y = y + xh.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(B, S, d_in)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = apply_norm(p["out_norm"], y.astype(x.dtype), "rmsnorm")
+    out = jnp.dot(y, p["out_proj"].astype(x.dtype))
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                     "state": final_state.astype(cache["state"].dtype)}
+    return out, new_cache
+
+
+def init_ssm_cache(batch: int, d_model: int, ssm: SSMConfig,
+                   dtype=jnp.float32):
+    d_in = ssm.expand * d_model
+    H, P = d_in // ssm.head_dim, ssm.head_dim
+    conv_dim = d_in + 2 * ssm.n_groups * ssm.d_state
+    return {"conv": jnp.zeros((batch, ssm.conv_kernel - 1, conv_dim), dtype),
+            "state": jnp.zeros((batch, H, P, ssm.d_state), jnp.float32)}

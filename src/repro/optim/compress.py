@@ -1,0 +1,56 @@
+"""Gradient compression for the cross-pod reduction (beyond-paper,
+distributed-optimization trick).
+
+int8 symmetric quantization with ERROR FEEDBACK: the quantization residual
+is carried into the next step's gradient so the compressed reduction is
+unbiased over time (Seide et al. / 1-bit-SGD lineage).  The cross-pod
+all-reduce then moves 1/4 of the fp32 bytes (per-tensor fp32 scale + int8
+payload); tests assert convergence matches uncompressed within tolerance.
+
+``compressed_psum``: shard_map-side helper — quantize, all_gather int8 over
+the pod axis, dequantize + sum locally (g-1 extra copies of int8 instead of
+fp32: link bytes ~/4)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_with_feedback(grads, error_state):
+    """-> (quantized tree of (q, scale), new_error_state).
+    error_state is a pytree like grads (fp32 residuals)."""
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        q, s = quantize(gf)
+        deq = dequantize(q, s)
+        return (q, s), gf - deq
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_e = tdef.flatten_up_to(error_state)
+    pairs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (tdef.unflatten([p[0] for p in pairs]),
+            tdef.unflatten([p[1] for p in pairs]))
+
+
+def init_error_state(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compressed_psum(g: jnp.ndarray, axis: str) -> jnp.ndarray:
+    """Inside shard_map: int8 all_gather over `axis`, dequant + sum."""
+    q, s = quantize(g.astype(jnp.float32))
+    qs = jax.lax.all_gather(q, axis)                 # (g, ...) int8
+    ss = jax.lax.all_gather(s, axis)                 # (g,) f32
+    return jnp.tensordot(ss, qs.astype(jnp.float32), axes=(0, 0))

@@ -1,0 +1,107 @@
+"""Batched serving engine: slot-based continuous batching (lite).
+
+Fixed decode slots over a shared KV cache; requests are admitted into free
+slots, prefilled one request at a time (prefill writes its slot's cache
+rows), then all active slots decode in lock-step with per-slot positions
+and EOS/max-token retirement.  This is the real control-flow skeleton of a
+production server (vLLM-style), scaled to this container."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.lm import RunConfig, forward, init_cache
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # (P,) int32
+    max_new: int = 16
+    eos: Optional[int] = None
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
+                 capacity: int = 256, rc: Optional[RunConfig] = None):
+        self.cfg = cfg
+        self.params = params
+        self.rc = rc or RunConfig(q_chunk=64, kv_chunk=64)
+        self.slots = slots
+        self.capacity = capacity
+        # one single-sequence cache per slot (slot caches stay independent
+        # so admission never disturbs running decodes)
+        self.caches = [init_cache(cfg, 1, capacity) for _ in range(slots)]
+        self.pos = [0] * slots
+        self.active: List[Optional[Request]] = [None] * slots
+
+        self._prefill = jax.jit(
+            lambda p, b, c: forward(p, self.cfg, self.rc, b, mode="prefill",
+                                    cache=c)[:2])
+        self._decode = jax.jit(
+            lambda p, b, c, pos: forward(p, self.cfg, self.rc, b,
+                                         mode="decode", cache=c,
+                                         pos=pos)[:2])
+
+    # ------------------------------------------------------------------
+    def admit(self, req: Request) -> bool:
+        for s in range(self.slots):
+            if self.active[s] is None:
+                toks = jnp.asarray(req.prompt, jnp.int32)[None]
+                logits, cache = self._prefill(self.params,
+                                              self._batch(toks), self.caches[s])
+                self.caches[s] = cache
+                self.pos[s] = len(req.prompt)
+                tok = int(jnp.argmax(logits, -1)[0])
+                req.out.append(tok)
+                self.active[s] = req
+                return True
+        return False
+
+    def _batch(self, toks):
+        b = {"tokens": toks}
+        if self.cfg.cross_attn_every:
+            b["image_embeds"] = jnp.zeros(
+                (toks.shape[0], self.cfg.n_image_tokens, self.cfg.d_model),
+                jnp.float32)
+        return b
+
+    def step(self) -> int:
+        """One decode step across all active slots; returns #active."""
+        n = 0
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            n += 1
+            last = jnp.asarray([[req.out[-1]]], jnp.int32)
+            logits, cache = self._decode(self.params, self._batch(last),
+                                         self.caches[s],
+                                         jnp.int32(self.pos[s]))
+            self.caches[s] = cache
+            self.pos[s] += 1
+            tok = int(jnp.argmax(logits, -1)[0])
+            req.out.append(tok)
+            if (req.eos is not None and tok == req.eos) \
+                    or len(req.out) >= req.max_new \
+                    or self.pos[s] >= self.capacity - 1:
+                req.done = True
+                self.active[s] = None       # retire -> slot reusable
+        return n
+
+    def run(self, requests: List[Request], max_steps: int = 512):
+        pending = list(requests)
+        done: List[Request] = []
+        for _ in range(max_steps):
+            while pending and self.admit(pending[0]):
+                pending.pop(0)
+            if self.step() == 0 and not pending:
+                break
+            done = [r for r in requests if r.done]
+        return [r for r in requests]

@@ -1,0 +1,36 @@
+"""Jitted serving steps: prefill (build caches) and decode (one token).
+
+These are the entry points the decode_*/long_* dry-run cells lower; the
+serve loop in serve/engine.py drives them for real batched requests."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.lm import RunConfig, forward
+
+
+def make_prefill_step(cfg: ModelConfig, rc: RunConfig):
+    def prefill_step(params, batch, cache):
+        logits, new_cache, _ = forward(params, cfg, rc, batch,
+                                       mode="prefill", cache=cache)
+        return logits, new_cache
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, rc: RunConfig, *, greedy: bool = True):
+    def decode_step(params, batch, cache, pos):
+        logits, new_cache, _ = forward(params, cfg, rc, batch,
+                                       mode="decode", cache=cache, pos=pos)
+        token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return (token if greedy else logits), logits, new_cache
+    return decode_step
+
+
+def make_forward_only(cfg: ModelConfig, rc: RunConfig):
+    """Encoder forward (hubert prefill_32k cell): full-seq hidden states."""
+    def encode_step(params, batch):
+        h, _, _ = forward(params, cfg, rc, batch, mode="train")
+        return h
+    return encode_step

@@ -1,0 +1,70 @@
+"""Jitted training step: grad-accumulation microbatching + AdamW.
+
+``make_train_step`` returns a pure (state, batch) -> (state, metrics)
+function.  With accum_steps > 1 the batch carries a leading microbatch axis
+and gradients accumulate in fp32 through a ``lax.scan`` — the optimizer
+update (and therefore the cross-pod gradient all-reduce that GSPMD places
+around it) happens once per step, letting XLA overlap the reduction with
+the last microbatch's backward."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.lm import RunConfig, loss_fn
+from repro.optim.adamw import OptConfig, apply_updates, init_opt_state
+
+
+def init_train_state(cfg: ModelConfig, key, rc: RunConfig):
+    from repro.models.lm import init_params
+    params = init_params(cfg, key, rc.param_dtype)
+    return {"params": params, "opt": init_opt_state(params)}
+
+
+def make_train_step(cfg: ModelConfig, rc: RunConfig, opt: OptConfig,
+                    accum_steps: int = 1, grad_shardings=None):
+    """grad_shardings: optional NamedSharding tree matching params — pins
+    the fp32 grad-accumulation carry to the parameter (FSDP) layout so the
+    per-microbatch gradient reduction lowers as reduce-scatter into a
+    SHARDED buffer instead of an all-reduce into a replicated one (2x link
+    bytes + a full replicated fp32 copy of the gradients otherwise)."""
+    def one_micro(params, mb):
+        return loss_fn(params, cfg, rc, mb)
+
+    grad_fn = jax.value_and_grad(one_micro, has_aux=True)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if accum_steps == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def _pin(tree):
+                if grad_shardings is None:
+                    return tree
+                return jax.tree.map(jax.lax.with_sharding_constraint, tree,
+                                    grad_shardings)
+
+            def body(carry, mb):
+                g_acc, l_acc = carry
+                (l, m), g = grad_fn(params, mb)
+                g_acc = _pin(jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g))
+                return (g_acc, l_acc + l), m
+
+            g0 = _pin(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            (g_sum, l_sum), ms = jax.lax.scan(
+                body, (g0, jnp.zeros((), jnp.float32)), batch)
+            grads = jax.tree.map(lambda g: g / accum_steps, g_sum)
+            loss = l_sum / accum_steps
+            metrics = jax.tree.map(lambda m: m[-1], ms)
+        new_params, new_opt, opt_metrics = apply_updates(
+            params, grads, state["opt"], opt)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step

@@ -1,0 +1,10 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests must see the
+plain 1-device CPU; multi-device tests spawn subprocesses with their own
+--xla_force_host_platform_device_count (see test_distributed.py)."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,128 @@
+"""Per-architecture smoke tests (assignment deliverable f): REDUCED config
+of the same family, one forward/train step on CPU, output shapes + no NaNs;
+plus decode == prefill-continuation consistency for every decodable arch."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config, reduced
+from repro.models import RunConfig, forward, init_cache, init_params, loss_fn
+
+RC = RunConfig(q_chunk=16, kv_chunk=16, loss_chunk=16)
+B, S = 2, 32
+
+
+def make_batch(cfg, T=S, seed=1):
+    rng = np.random.default_rng(seed)
+    if cfg.encoder_only:
+        return {"features": jnp.asarray(
+                    rng.normal(size=(B, T, cfg.d_model)) * 0.3, jnp.float32),
+                "labels": jnp.asarray(
+                    rng.integers(0, cfg.vocab_size, (B, T)), jnp.int32),
+                "mask": jnp.zeros((B, T), bool).at[:, ::4].set(True)}
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (B, T)), jnp.int32)}
+    if cfg.cross_attn_every:
+        batch["image_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.n_image_tokens, cfg.d_model)) * 0.3,
+            jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_smoke_train_step(arch):
+    cfg = reduced(get_config(arch))
+    params = init_params(cfg, jax.random.key(0))
+    batch = make_batch(cfg)
+    h, _, _ = jax.jit(lambda p, b: forward(p, cfg, RC, b, mode="train"))(
+        params, batch)
+    assert h.shape == (B, S, cfg.d_model)
+    assert np.all(np.isfinite(np.asarray(h, np.float32)))
+    loss, metrics = jax.jit(lambda p, b: loss_fn(p, cfg, RC, b))(params, batch)
+    assert np.isfinite(float(loss))
+    # one grad step moves the loss
+    g = jax.jit(jax.grad(lambda p, b: loss_fn(p, cfg, RC, b)[0]))(
+        params, batch)
+    assert all(np.all(np.isfinite(np.asarray(l, np.float32)))
+               for l in jax.tree.leaves(g))
+    p2 = jax.tree.map(lambda p, gg: p - 0.3 * gg, params, g)
+    loss2, _ = jax.jit(lambda p, b: loss_fn(p, cfg, RC, b))(p2, batch)
+    assert float(loss2) < float(loss)
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCH_NAMES
+                                  if get_config(a).has_decode])
+def test_decode_matches_prefill(arch):
+    cfg = reduced(get_config(arch))
+    params = init_params(cfg, jax.random.key(0))
+    T = 16
+    batch_full = make_batch(cfg, T + 1)
+    toks = batch_full["tokens"]
+    sub = lambda t: dict(batch_full, tokens=t)
+    cache = init_cache(cfg, B, T + 4)
+    _, cache, _ = forward(params, cfg, RC, sub(toks[:, :T]), mode="prefill",
+                          cache=cache)
+    logits_d, _, _ = forward(params, cfg, RC, sub(toks[:, T:T + 1]),
+                             mode="decode", cache=cache, pos=T)
+    cache2 = init_cache(cfg, B, T + 4)
+    logits_ref, _, _ = forward(params, cfg, RC, sub(toks), mode="prefill",
+                               cache=cache2)
+    rel = float(jnp.max(jnp.abs(logits_d - logits_ref))) / \
+        (float(jnp.max(jnp.abs(logits_ref))) + 1e-9)
+    assert rel < 2e-3, f"{arch}: decode/prefill mismatch {rel}"
+
+
+@pytest.mark.parametrize("arch", ["deepseek-v2-236b", "moonshot-v1-16b-a3b"])
+def test_moe_impls_agree_in_model(arch):
+    """Full model forward identical across dense/xla/pallas dispatch."""
+    cfg = reduced(get_config(arch))
+    params = init_params(cfg, jax.random.key(0))
+    batch = make_batch(cfg)
+    outs = {}
+    for impl in ("dense", "xla", "pallas"):
+        rc = RC._replace(moe_impl=impl)
+        h, _, _ = forward(params, cfg, rc, batch, mode="train")
+        outs[impl] = np.asarray(h, np.float32)
+    np.testing.assert_allclose(outs["dense"], outs["xla"],
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(outs["dense"], outs["pallas"],
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_unroll_matches_scan():
+    cfg = reduced(get_config("qwen2-7b"), layers=3)
+    params = init_params(cfg, jax.random.key(0))
+    batch = make_batch(cfg)
+    h1, _, _ = forward(params, cfg, RC, batch, mode="train")
+    h2, _, _ = forward(params, cfg, RC._replace(unroll=True), batch,
+                       mode="train")
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_exact_config_shapes():
+    """The full (non-reduced) configs expose the assigned dimensions."""
+    import repro.analysis.flops as F
+    expected = {
+        "hubert-xlarge": (48, 1280), "deepseek-v2-236b": (60, 5120),
+        "moonshot-v1-16b-a3b": (48, 2048), "qwen2-7b": (28, 3584),
+        "smollm-360m": (32, 960), "gemma2-9b": (42, 3584),
+        "starcoder2-3b": (30, 3072), "rwkv6-1.6b": (24, 2048),
+        "llama-3.2-vision-11b": (40, 4096), "zamba2-7b": (81, 3584),
+    }
+    for arch, (L, d) in expected.items():
+        cfg = get_config(arch)
+        assert (cfg.n_layers, cfg.d_model) == (L, d)
+    # parameter-count sanity (right order of magnitude vs names)
+    approx = {"deepseek-v2-236b": 236e9, "qwen2-7b": 7.6e9,
+              "smollm-360m": 0.36e9, "gemma2-9b": 9.2e9,
+              "starcoder2-3b": 3.0e9, "rwkv6-1.6b": 1.6e9,
+              "zamba2-7b": 7.2e9,
+              # assigned pool pins 48L (the released Moonlight has 27):
+              # 48 x 64e x (3*2048*1408) alone is ~26B — check the assigned
+              # config's own arithmetic, not the marketing name
+              "moonshot-v1-16b-a3b": 28.4e9}
+    for arch, n in approx.items():
+        got = F.total_params(get_config(arch))
+        assert 0.55 * n < got < 1.6 * n, f"{arch}: {got:.3e} vs {n:.3e}"

@@ -1,0 +1,65 @@
+"""int8 weight-only expert quantization (serving path, §Perf cell 3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MoEConfig
+from repro.core import apply_moe, dispatch_config, init_moe_params
+from repro.core.quant import (QuantTensor, effective_expert_weights,
+                              is_quantized, quantize_expert,
+                              quantize_moe_params, quantize_params_tree)
+
+
+def test_quantize_roundtrip_error_bound():
+    w = jax.random.normal(jax.random.key(0), (4, 16, 24)) * 0.2
+    q, s = quantize_expert(w)
+    assert q.dtype == jnp.int8 and s.shape == (4, 1, 1)
+    deq = q.astype(jnp.float32) * s
+    # symmetric int8: max error <= scale/2 per element
+    assert float(jnp.max(jnp.abs(deq - w))) <= float(jnp.max(s)) * 0.51
+
+
+def test_quant_tensor_indexing_matches_dequant():
+    w = jax.random.normal(jax.random.key(1), (8, 4, 6))
+    q, s = quantize_expert(w)
+    qt = QuantTensor(q, s, jnp.float32)
+    np.testing.assert_allclose(np.asarray(qt[3]),
+                               np.asarray(q[3].astype(jnp.float32) * s[3]))
+    assert qt.shape == (8, 4, 6)
+
+
+def test_quantized_moe_layer_close_to_fp():
+    moe = MoEConfig(n_experts=8, top_k=2, d_ff_expert=32,
+                    n_shared_experts=1, block_m=8)
+    params = init_moe_params(jax.random.key(0), moe, 16)
+    qparams = dict(quantize_moe_params(
+        {k: v for k, v in params.items() if k != "shared"}),
+        shared=params["shared"])
+    assert is_quantized(qparams)
+    x = jax.random.normal(jax.random.key(1), (4, 32, 16))
+    cfg = dispatch_config(moe, impl="xla")
+    y, _ = apply_moe(params, x, cfg)
+    yq, _ = apply_moe(qparams, x, cfg)
+    rel = float(jnp.max(jnp.abs(y - yq))) / float(jnp.max(jnp.abs(y)))
+    assert rel < 0.05, rel
+
+
+def test_quantize_full_model_tree():
+    from repro.configs import get_config, reduced
+    from repro.models import init_params
+    cfg = reduced(get_config("moonshot-v1-16b-a3b"))
+    params = jax.eval_shape(lambda k: quantize_params_tree(
+        init_params(cfg, k)), jax.random.key(0))
+    body_moe = params["body"]["b0"]["moe"]
+    assert "w_gate_q" in body_moe and body_moe["w_gate_q"].dtype == jnp.int8
+    assert "w_gate" not in body_moe
+    # stacked group axis preserved
+    assert body_moe["w_gate_q"].ndim == 4
+
+
+def test_effective_weights_passthrough_for_fp():
+    moe = MoEConfig(n_experts=4, top_k=1, d_ff_expert=8, block_m=8)
+    params = init_moe_params(jax.random.key(0), moe, 8)
+    eff = effective_expert_weights(params, jnp.float32)
+    assert eff["w_gate"] is params["w_gate"]
