@@ -7,7 +7,7 @@ import numpy as np
 import jax
 
 from repro.configs import get_config, reduced
-from repro.models import RunConfig, init_params
+from repro.models import init_params
 from repro.serve.engine import Request, ServeEngine
 
 
@@ -15,8 +15,9 @@ def main():
     cfg = reduced(get_config("moonshot-v1-16b-a3b"), layers=2, d_model=64,
                   vocab=256)
     params = init_params(cfg, jax.random.key(0))
-    engine = ServeEngine(cfg, params, slots=3, capacity=64,
-                         rc=RunConfig(q_chunk=32, kv_chunk=32))
+    # no explicit RunConfig: the engine's serving default applies — the
+    # `dynamic` schedule policy (adaptive block-to-expert assignment)
+    engine = ServeEngine(cfg, params, slots=3, capacity=64)
 
     rng = np.random.default_rng(0)
     requests = [Request(rid=i,
@@ -25,8 +26,10 @@ def main():
                         max_new=8)
                 for i in range(7)]
     print(f"serving {len(requests)} requests on {engine.slots} slots "
-          f"(MoE: {cfg.moe.n_experts} experts, top-{cfg.moe.top_k})")
-    engine.run(requests)
+          f"(MoE: {cfg.moe.n_experts} experts, top-{cfg.moe.top_k}, "
+          f"schedule_policy={engine.rc.schedule_policy})")
+    done = engine.run(requests)
+    assert done == requests, "run() returns completed requests in order"
     for r in requests:
         print(f"  req {r.rid}: prompt={r.prompt.tolist()} -> {r.out}")
     assert all(r.done for r in requests)

@@ -2,9 +2,9 @@
 
 Replaces the router with synthetic uniform / Zipf(1.2) / Zipf(2.0)
 assignments (uniform 1/k gating, fixed token budget — the paper's
-methodology) and reports the fixed-BLOCK_M tile-padding waste, per-expert
-load shares, and EP capacity drop rates that drive the paper's Qwen2-MoE
-findings.
+methodology) and compares the three schedule policies (repro.scheduling)
+on the tile-padding waste, block occupancy, and drop rates that drive the
+paper's Qwen2-MoE findings.
 
     PYTHONPATH=src python examples/skew_study.py
 """
@@ -14,11 +14,13 @@ import sys
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
 
 import jax
-import numpy as np
 
 from benchmarks.common import zipf_assignments
 from repro.configs.paper import PAPER_CONFIGS
-from repro.core.schedule import build_schedule, round_up
+from repro.scheduling import (DEFAULT_POLICY_SWEEP, build_schedule,
+                              schedule_stats)
+
+POLICIES = DEFAULT_POLICY_SWEEP
 
 
 def main():
@@ -31,20 +33,22 @@ def main():
         for dist, alpha in (("uniform", 0.0), ("zipf-1.2", 1.2),
                             ("zipf-2.0", 2.0)):
             _, idx = zipf_assignments(jax.random.key(3), T, k, E, alpha)
-            sched = build_schedule(idx, E, block_m)
-            counts = np.asarray(sched.counts)
-            useful = counts.sum()
-            padded = int(np.asarray(sched.block_active).sum()) * block_m
-            cap = round_up(max(1, int(T * k * 1.25 / E)), block_m)
-            dropped = np.maximum(counts - cap, 0).sum() / useful
-            print(f"  {dist:9s} top1_share={counts.max() / useful:5.1%}  "
-                  f"tile_waste={padded / useful:4.2f}x  "
-                  f"EP_drop@cf1.25={dropped:5.1%}")
+            stats = {policy: schedule_stats(
+                build_schedule(idx, E, block_m, policy=policy, **kw))
+                for policy, kw in POLICIES}
+            line = [f"{policy}: waste={float(st.pad_waste):4.2f}x "
+                    f"occ={float(st.occupancy):4.1%} "
+                    f"drop={float(st.drop_fraction):5.1%}"
+                    for policy, st in stats.items()]
+            top1 = float(stats["fixed"].top1_share)   # routing skew: policy-independent
+            print(f"  {dist:9s} top1_share={top1:5.1%}  " + "  ".join(line))
     print("\nPaper's finding reproduced structurally: at 64 experts the "
-          "fixed-BLOCK_M schedule pads hardest and EP capacity drops spike "
-          "under Zipf(2.0) — the regime where Megablocks' block-sparse "
-          "layout wins (paper Fig. 3). Dynamic block-to-expert assignment "
-          "is the paper's proposed fix.")
+          "fixed-BLOCK_M schedule pads hardest under Zipf(2.0) — the regime "
+          "where Megablocks' block-sparse layout wins (paper Fig. 3). The "
+          "`dynamic` policy (the paper's proposed fix, scheduling/dynamic.py) "
+          "recovers most of that waste by sub-tiling light experts while "
+          "keeping heavy experts on full MXU tiles; `capacity_factor` trades "
+          "waste for drops (GShard EP semantics).")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,70 @@
+"""jax version compatibility shims.
+
+The repo targets current jax; these adapters keep it running on the older
+API surface too (containers pin different jax versions):
+
+* ``jax.shard_map``            <-> ``jax.experimental.shard_map.shard_map``
+  (``check_vma`` was ``check_rep``; both disabled — the EP bodies use
+  collectives the replication checker cannot see through)
+* ``jax.set_mesh(mesh)``       <-> ``with mesh:`` (Mesh is its own context
+  manager on older jax)
+* ``get_concrete_mesh()``      returns an empty tuple instead of None on
+  some versions
+* ``compiled.cost_analysis()`` returns a one-element list instead of a
+  dict on older jax
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+if hasattr(jax, "shard_map"):
+    def shard_map(f, *, mesh, in_specs, out_specs):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False)
+
+
+def set_mesh(mesh: Mesh):
+    """Context manager installing ``mesh`` as the ambient mesh."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def current_mesh():
+    """The ambient concrete mesh (set_mesh / `with mesh:`), or None."""
+    from jax._src import mesh as mesh_lib
+    get = getattr(mesh_lib, "get_concrete_mesh", None)
+    m = get() if get is not None else None
+    if isinstance(m, Mesh) and not getattr(m, "empty", False):
+        return m
+    m = mesh_lib.thread_resources.env.physical_mesh
+    if isinstance(m, Mesh) and not getattr(m, "empty", False):
+        return m
+    return None
+
+
+def axis_size(axis: str) -> int:
+    """Size of a named mesh axis inside a shard_map/pmap body.
+
+    ``jax.lax.axis_size`` is recent; ``psum(1, axis)`` is the classic
+    idiom and is folded to a static int on every version.
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis)
+    return jax.lax.psum(1, axis)
+
+
+def cost_analysis(compiled) -> dict:
+    """Normalized ``compiled.cost_analysis()``: always a (possibly empty)
+    dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}

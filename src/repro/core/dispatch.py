@@ -21,6 +21,11 @@ Three interchangeable implementations of the grouped compute:
 (Table 4b): two separate grouped GEMMs whose outputs round-trip HBM.
 ``fold_combine=True`` applies the top-k combine weights inside the down
 projection's epilogue instead of at unpermute (beyond-paper; see DESIGN.md).
+
+``schedule_policy`` selects how the block schedule is constructed
+(repro.scheduling; DESIGN.md §3): ``fixed`` (the paper), ``capacity_factor``
+(bounded buckets + overflow drops), or ``dynamic`` (adaptive block-to-expert
+assignment under skew — the serving default).
 """
 from __future__ import annotations
 
@@ -29,8 +34,9 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.schedule import BlockSchedule, build_schedule
+from repro.distributed.ctx import constrain
 from repro.kernels import ops, ref
+from repro.scheduling import BlockSchedule, build_schedule, schedule_stats
 
 
 class MoEDispatchConfig(NamedTuple):
@@ -44,6 +50,27 @@ class MoEDispatchConfig(NamedTuple):
     norm_topk: bool = False
     routed_scale: float = 1.0
     interpret: Optional[bool] = None
+    schedule_policy: str = "fixed"   # fixed | capacity_factor | dynamic
+    capacity_factor: float = 2.0     # capacity_factor policy: bucket headroom
+    block_m_min: int = 8             # dynamic policy: sub-block granularity
+    emit_stats: bool = False         # add ScheduleStats scalars to aux (off in
+                                     # the layer scan: aux is a fixed carry)
+
+
+def schedule_kwargs(cfg: MoEDispatchConfig) -> dict:
+    """Per-policy construction kwargs from the dispatch config."""
+    if cfg.schedule_policy == "capacity_factor":
+        return {"capacity_factor": cfg.capacity_factor}
+    if cfg.schedule_policy == "dynamic":
+        return {"block_m_min": cfg.block_m_min}
+    return {}
+
+
+def build_dispatch_schedule(indices: jnp.ndarray,
+                            cfg: MoEDispatchConfig) -> BlockSchedule:
+    """The configured policy's schedule for this batch's routing."""
+    return build_schedule(indices, cfg.n_experts, cfg.block_m,
+                          policy=cfg.schedule_policy, **schedule_kwargs(cfg))
 
 
 # ----------------------------------------------------------------------
@@ -122,10 +149,14 @@ def moe_ffn(x: jnp.ndarray, w_router: jnp.ndarray, w_gate: jnp.ndarray,
         y = ref.moe_ffn_dense_ref(x, w_gate, w_up, w_down, weights, indices)
         return y, aux
 
-    sched = build_schedule(indices, cfg.n_experts, cfg.block_m)
+    sched = build_dispatch_schedule(indices, cfg)
+    if cfg.emit_stats:
+        aux.update({f"sched/{k}": v
+                    for k, v in schedule_stats(sched)._asdict().items()})
 
     if cfg.impl == "pallas":
         xp = ops.permute(x, sched, interpret=cfg.interpret)
+        xp = constrain("moe_dispatch", xp)
         if cfg.fuse_gate_up:
             h = ops.fused_gate_up(xp, w_gate, w_up, sched,
                                   interpret=cfg.interpret)
@@ -141,7 +172,7 @@ def moe_ffn(x: jnp.ndarray, w_router: jnp.ndarray, w_gate: jnp.ndarray,
         y = ops.unpermute(y, sched, None if cfg.fold_combine else weights,
                           interpret=cfg.interpret)
     elif cfg.impl == "xla":
-        xp = ref.permute_ref(x, sched)
+        xp = constrain("moe_dispatch", ref.permute_ref(x, sched))
         if cfg.fuse_gate_up:
             h = fused_gate_up_xla(xp, w_gate, w_up, sched)
         else:

@@ -30,10 +30,13 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import axis_size, current_mesh, shard_map
 from repro.core.dispatch import (MoEDispatchConfig, _aux_losses,
-                                 fused_gate_up_xla, grouped_gemm_xla, route)
-from repro.core.schedule import BlockSchedule, build_schedule, round_up
+                                 fused_gate_up_xla, grouped_gemm_xla, route,
+                                 schedule_kwargs)
 from repro.kernels import ops, ref
+from repro.scheduling import (BlockSchedule, build_schedule, capacity_slots,
+                              expert_capacity)
 
 
 def _static_schedule(n_rows: int, n_local_experts: int, block_m: int,
@@ -85,7 +88,7 @@ def _grouped_ffn(x, params, sched: BlockSchedule, cfg: MoEDispatchConfig,
 def _ep_sharded_local(params, x_loc, cfg: MoEDispatchConfig, axis: str,
                       capacity_factor: float):
     """Per-rank body for token_layout='sharded'. x_loc: (T_local, d)."""
-    ep = jax.lax.axis_size(axis)
+    ep = axis_size(axis)
     E, k, M = cfg.n_experts, cfg.top_k, cfg.block_m
     E_local = E // ep
     Tl, d = x_loc.shape
@@ -95,17 +98,12 @@ def _ep_sharded_local(params, x_loc, cfg: MoEDispatchConfig, axis: str,
     aux = {k_: jax.lax.pmean(v, axis) for k_, v in aux.items()}
 
     # capacity per (expert) bucket, tile-aligned so the receive layout is
-    # statically tile-aligned for the grouped GEMM
-    cap = round_up(max(1, int(Tl * k * capacity_factor / E)), M)
+    # statically tile-aligned for the grouped GEMM; slot/keep semantics are
+    # shared with the single-device capacity_factor policy (scheduling/)
+    cap = expert_capacity(Tl, k, E, M, capacity_factor)
 
     flat = indices.reshape(-1)                               # (Tl*k,)
-    sort_idx = jnp.argsort(flat, stable=True)
-    counts = jnp.bincount(flat, length=E)
-    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
-                              jnp.cumsum(counts)]).astype(jnp.int32)
-    ranks = jnp.arange(Tl * k, dtype=jnp.int32)
-    slot_sorted = ranks - starts[flat[sort_idx]]             # rank within expert
-    slot = jnp.zeros((Tl * k,), jnp.int32).at[sort_idx].set(slot_sorted)
+    slot, _counts = capacity_slots(flat, E)
     keep = slot < cap
     dest = flat * cap + slot                                 # row in send buf
 
@@ -141,9 +139,10 @@ def _ep_sharded_local(params, x_loc, cfg: MoEDispatchConfig, axis: str,
     return out.astype(x_loc.dtype), aux
 
 
-def _ep_replicated_local(params, x_loc, cfg: MoEDispatchConfig, axis: str):
+def _ep_replicated_local(params, x_loc, cfg: MoEDispatchConfig, axis: str,
+                         capacity_factor: float):
     """Per-rank body for token_layout='replicated' (decode)."""
-    ep = jax.lax.axis_size(axis)
+    ep = axis_size(axis)
     E, M = cfg.n_experts, cfg.block_m
     E_local = E // ep
     r = jax.lax.axis_index(axis)
@@ -158,7 +157,16 @@ def _ep_replicated_local(params, x_loc, cfg: MoEDispatchConfig, axis: str):
     idx_local = jnp.where(mine, indices - base, E_local)
     w_masked = jnp.where(mine, weights, 0.0)
 
-    sched = build_schedule(idx_local, E_local + 1, M)
+    # the configured schedule policy, over the local experts plus one
+    # sentinel "expert" that absorbs non-owned assignments; capacity buckets
+    # must be sized over the GLOBAL expert count so EP drop semantics match
+    # the single-device policy exactly
+    kw = schedule_kwargs(cfg)
+    if cfg.schedule_policy == "capacity_factor":
+        kw["cap"] = expert_capacity(x_loc.shape[0], cfg.top_k, E, M,
+                                    capacity_factor)
+    sched = build_schedule(idx_local, E_local + 1, M,
+                           policy=cfg.schedule_policy, **kw)
     # deactivate sentinel blocks so Pallas skips them on TPU
     sched = sched._replace(
         block_active=sched.block_active
@@ -180,14 +188,24 @@ def _ep_replicated_local(params, x_loc, cfg: MoEDispatchConfig, axis: str):
 
 # ----------------------------------------------------------------------
 def apply_moe_ep(params, x: jnp.ndarray, cfg: MoEDispatchConfig, *,
-                 axis: str = "model", capacity_factor: float = 2.0,
+                 axis: str = "model", capacity_factor: Optional[float] = None,
                  token_layout: str = "sharded"):
     """Distributed MoE layer. x: (B, S, d) inside jit (GSPMD context);
     the EP dispatch itself runs under shard_map over `axis`.
 
+    ``capacity_factor`` (None -> ``cfg.capacity_factor``) is the single
+    capacity knob for BOTH layouts: the sharded path's a2a transport
+    buckets, and the replicated path's capacity_factor-policy drop buckets.
+    Note the sharded layout's receive side is inherently a static capacity
+    layout (the all-to-all needs load-independent buffers), so
+    ``cfg.schedule_policy`` applies to the replicated (decode) layout and
+    single-device dispatch only — the sharded path ignores it by design.
+
     Shared experts are dense compute on (sharded) tokens — they stay in
     plain GSPMD-land outside the shard_map.
     """
+    if capacity_factor is None:
+        capacity_factor = cfg.capacity_factor
     mesh = _current_mesh()
     if mesh is None or mesh.empty:
         raise RuntimeError("apply_moe_ep requires an active mesh "
@@ -216,7 +234,7 @@ def apply_moe_ep(params, x: jnp.ndarray, cfg: MoEDispatchConfig, *,
         def body(p_loc, x_loc):
             B_l, S_l, _ = x_loc.shape
             y, aux = _ep_replicated_local(p_loc, x_loc.reshape(-1, d), cfg,
-                                          axis)
+                                          axis, capacity_factor)
             return y.reshape(B_l, S_l, d), aux
 
     routed = {k_: v for k_, v in params.items() if k_ != "shared"}
@@ -224,9 +242,9 @@ def apply_moe_ep(params, x: jnp.ndarray, cfg: MoEDispatchConfig, *,
                    else P(axis, None, None))
               for k_ in routed}
     aux_spec = {"lb_loss": P(), "router_z": P()}
-    y, aux = jax.shard_map(
+    y, aux = shard_map(
         body, mesh=mesh, in_specs=(pspecs, in_spec),
-        out_specs=(out_spec, aux_spec), check_vma=False)(routed, x)
+        out_specs=(out_spec, aux_spec))(routed, x)
 
     if "shared" in params:
         sh = params["shared"]
@@ -246,9 +264,5 @@ def _axsize(mesh, axes) -> int:
 
 
 def _current_mesh():
-    """Concrete mesh from jax.set_mesh(...) or a `with mesh:` block."""
-    from jax._src import mesh as mesh_lib
-    m = mesh_lib.get_concrete_mesh()
-    if m is not None and not getattr(m, "empty", False):
-        return m
-    return mesh_lib.thread_resources.env.physical_mesh
+    """Concrete mesh from set_mesh(...) or a `with mesh:` block."""
+    return current_mesh()

@@ -37,12 +37,19 @@ def init_moe_params(key, moe: MoEConfig, d_model: int, dtype=jnp.float32):
 
 def dispatch_config(moe: MoEConfig, *, impl: str = "xla",
                     fuse_gate_up: bool = True, fold_combine: bool = True,
+                    schedule_policy: str = "fixed",
+                    capacity_factor: float | None = None,
+                    block_m_min: int = 8,
                     interpret=None) -> MoEDispatchConfig:
     return MoEDispatchConfig(
         n_experts=moe.n_experts, top_k=moe.top_k, block_m=moe.block_m,
         impl=impl, fuse_gate_up=fuse_gate_up, fold_combine=fold_combine,
         gating=moe.gating, norm_topk=moe.norm_topk,
-        routed_scale=moe.routed_scale, interpret=interpret)
+        routed_scale=moe.routed_scale, interpret=interpret,
+        schedule_policy=schedule_policy,
+        capacity_factor=(moe.capacity_factor if capacity_factor is None
+                         else capacity_factor),
+        block_m_min=block_m_min)
 
 
 def apply_moe(params, x: jnp.ndarray, cfg: MoEDispatchConfig):

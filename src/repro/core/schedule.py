@@ -1,92 +1,10 @@
-"""On-device block-schedule construction (paper Algorithm 1, TPU form).
+"""Back-compat shim: schedule construction moved to ``repro.scheduling``.
 
-The paper computes the (expert_id, token_offset) block list on the host (its
-Limitation 2 — a host/device sync per layer).  On TPU the schedule is built
-with jnp primitives and consumed by the grouped-GEMM kernels as
-scalar-prefetch operands, so there is no host round-trip.
-
-TPU grids are static, so instead of the paper's dynamic block list we use
-*tile-aligned expert segments*: the permutation places expert ``e``'s tokens
-at a ``block_m``-aligned base offset.  Every M-tile then belongs to exactly
-one expert and the static worst-case capacity is
-
-    capacity = round_up(T*k, block_m) + n_experts * block_m
-
-(each expert can waste at most one partial tile — the same asymptotic waste
-as the paper's masked partial tiles).
+``build_schedule(indices, E, M)`` keeps its historical fixed-policy
+behavior; pass ``policy="capacity_factor"`` / ``policy="dynamic"`` (or set
+``MoEDispatchConfig.schedule_policy``) for the adaptive layouts.  See
+scheduling/base.py and DESIGN.md §3.
 """
-from __future__ import annotations
-
-from typing import NamedTuple
-
-import jax.numpy as jnp
-
-
-def round_up(x: int, m: int) -> int:
-    return (x + m - 1) // m * m
-
-
-class BlockSchedule(NamedTuple):
-    """Everything the dispatch pipeline needs, all device arrays.
-
-    With T = tokens, k = top_k, E = experts, M = block_m,
-    capacity = round_up(T*k, M) + E*M, num_blocks = capacity // M.
-    """
-
-    counts: jnp.ndarray          # (E,)  int32 tokens routed to each expert
-    group_offsets: jnp.ndarray   # (E+1,) int32 padded segment starts (inclusive scan)
-    src_tok: jnp.ndarray         # (capacity,) int32 source token row, -1 = padding
-    pos: jnp.ndarray             # (T, k) int32 padded row of expanded token (t, j)
-    block_expert: jnp.ndarray    # (num_blocks,) int32 owning expert (clamped)
-    block_active: jnp.ndarray    # (num_blocks,) int32 1 = block has real rows
-    capacity: int                # static
-    block_m: int                 # static
-
-
-def schedule_capacity(n_tokens: int, top_k: int, n_experts: int, block_m: int) -> int:
-    return round_up(n_tokens * top_k, block_m) + n_experts * block_m
-
-
-def build_schedule(indices: jnp.ndarray, n_experts: int, block_m: int) -> BlockSchedule:
-    """indices: (T, k) int32 expert assignment per token. All on-device."""
-    T, k = indices.shape
-    E, M = n_experts, block_m
-    capacity = schedule_capacity(T, k, E, M)
-    num_blocks = capacity // M
-
-    flat = indices.reshape(-1).astype(jnp.int32)              # (T*k,)
-    sort_idx = jnp.argsort(flat, stable=True)                 # expanded ids by expert
-    counts = jnp.bincount(flat, length=E).astype(jnp.int32)   # (E,)
-    padded_counts = (counts + M - 1) // M * M
-    padded_starts = jnp.concatenate(
-        [jnp.zeros((1,), jnp.int32), jnp.cumsum(padded_counts)]).astype(jnp.int32)
-    unpadded_starts = jnp.concatenate(
-        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)]).astype(jnp.int32)
-
-    ranks = jnp.arange(T * k, dtype=jnp.int32)
-    expert_sorted = flat[sort_idx]
-    dest = (padded_starts[expert_sorted]
-            + ranks - unpadded_starts[expert_sorted])          # (T*k,) padded rows
-
-    pos = jnp.zeros((T * k,), jnp.int32).at[sort_idx].set(dest).reshape(T, k)
-    src_tok = jnp.full((capacity,), -1, jnp.int32).at[dest].set(
-        sort_idx // k, mode="drop")
-
-    block_starts = jnp.arange(num_blocks, dtype=jnp.int32) * M
-    padded_ends = jnp.cumsum(padded_counts)                   # (E,)
-    block_expert = jnp.searchsorted(
-        padded_ends, block_starts, side="right").astype(jnp.int32)
-    total_padded = padded_ends[-1] if E > 0 else jnp.int32(0)
-    block_active = (block_starts < total_padded).astype(jnp.int32)
-    block_expert = jnp.minimum(block_expert, E - 1)
-
-    return BlockSchedule(
-        counts=counts,
-        group_offsets=padded_starts,
-        src_tok=src_tok,
-        pos=pos,
-        block_expert=block_expert,
-        block_active=block_active,
-        capacity=capacity,
-        block_m=M,
-    )
+from repro.scheduling import (BlockSchedule, ScheduleStats,  # noqa: F401
+                              available_policies, build_schedule,
+                              round_up, schedule_capacity, schedule_stats)

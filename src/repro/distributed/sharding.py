@@ -185,10 +185,17 @@ def activation_rules(cfg: ModelConfig, mesh: Mesh, mode: str,
             "channels3": P(b, None, "model"),        # (B,S,C)
             "qkv": P(b, None, "model", None),
         }
+    # "moe_dispatch" is the permuted (capacity, d) expert-contiguous buffer
+    # every schedule policy emits (scheduling/base.py).  Its row order is a
+    # data-dependent permutation of tokens, so it must never shard over
+    # 'model' (the schedule is rank-local; the EP paths run under shard_map
+    # and own their copies) — it rides the dp axes, matching the FSDP
+    # weight-gather scheme of the grouped GEMMs.
     if mode == "decode":
         return {
             "residual": P(b, None, None),
             "qkv": P(b, None, None, None),
+            "moe_dispatch": P(b, None),
         }
     # transformer train/prefill: SP/CP — sequence over model
     return {
@@ -196,4 +203,5 @@ def activation_rules(cfg: ModelConfig, mesh: Mesh, mode: str,
         "q_seq": P(b, "model", None, None),
         "kv_full": P(b, None, None, None),
         "moe_tokens": P(b, "model", None),
+        "moe_dispatch": P(b, None),
     }

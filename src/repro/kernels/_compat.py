@@ -1,0 +1,9 @@
+"""Pallas-TPU API compatibility across jax versions.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``; the
+kernels import the alias from here so they compile against either name.
+"""
+from jax.experimental.pallas import tpu as _pltpu
+
+CompilerParams = getattr(_pltpu, "CompilerParams",
+                         getattr(_pltpu, "TPUCompilerParams", None))

@@ -10,7 +10,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.schedule import BlockSchedule
+from repro.scheduling import BlockSchedule
 from repro.kernels import fused_gate_up as _fgu
 from repro.kernels import grouped_gemm as _gg
 from repro.kernels import permute as _perm

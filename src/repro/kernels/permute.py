@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 
 def _kernel(src_ref, x_ref, out_ref):
     i = pl.program_id(0)
@@ -44,7 +46,7 @@ def permute(x: jnp.ndarray, src_tok: jnp.ndarray, *, block_d: int = 0,
         _kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((capacity, d), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary")),
         interpret=interpret,
     )

@@ -11,7 +11,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.schedule import BlockSchedule
+from repro.scheduling import BlockSchedule
 
 
 # ----------------------------------------------------------------------

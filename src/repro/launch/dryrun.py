@@ -37,6 +37,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
     from repro.analysis.hlo import collective_report
     from repro.configs import SHAPE_BY_NAME, cell_is_runnable, get_config
+    from repro.compat import cost_analysis, set_mesh
     from repro.distributed.ctx import use_rules
     from repro.launch.mesh import make_production_mesh
     from repro.launch.specs import cell_inputs
@@ -70,7 +71,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         donate = (2,)
     t0 = time.time()
     try:
-        with jax.set_mesh(mesh), use_rules(mesh, ci.rules):
+        with set_mesh(mesh), use_rules(mesh, ci.rules):
             jitted = jax.jit(ci.step_fn, in_shardings=ci.in_shardings,
                              out_shardings=ci.out_shardings,
                              donate_argnums=donate)
@@ -79,7 +80,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis() or {}
+        cost = cost_analysis(compiled)
         hlo = compiled.as_text()
         from repro.models.lm import group_structure
         _, _, n_groups, _ = group_structure(cfg)

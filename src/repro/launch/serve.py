@@ -17,6 +17,9 @@ def main():
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--capacity", type=int, default=128)
     ap.add_argument("--quant-experts", action="store_true")
+    ap.add_argument("--schedule-policy", default="dynamic",
+                    choices=["fixed", "capacity_factor", "dynamic"],
+                    help="MoE schedule policy (serving default: dynamic)")
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
 
@@ -47,7 +50,8 @@ def main():
 
     engine = ServeEngine(cfg, params, slots=args.slots,
                          capacity=args.capacity,
-                         rc=RunConfig(q_chunk=64, kv_chunk=64))
+                         rc=RunConfig(q_chunk=64, kv_chunk=64,
+                                      schedule_policy=args.schedule_policy))
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab_size,

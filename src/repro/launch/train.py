@@ -45,6 +45,7 @@ def main():
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     from repro.configs import get_config, reduced
+    from repro.compat import set_mesh
     from repro.distributed.ctx import use_rules
     from repro.distributed.sharding import (activation_rules, batch_specs,
                                             param_specs)
@@ -89,7 +90,7 @@ def main():
                      state_shardings=state_sh, batch_shardings=batch_sh)
 
     if mesh is not None:
-        with jax.set_mesh(mesh), use_rules(mesh, rules):
+        with set_mesh(mesh), use_rules(mesh, rules):
             out = run()
     else:
         out = run()

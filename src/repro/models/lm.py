@@ -52,6 +52,8 @@ class RunConfig(NamedTuple):
     fuse_gate_up: bool = True
     fold_combine: bool = True
     capacity_factor: float = 2.0     # EP buffer headroom
+    schedule_policy: str = "fixed"   # fixed | capacity_factor | dynamic
+                                     # (serving engine defaults to dynamic)
     unroll: bool = False             # python-loop the layer stack (roofline
                                      # validation: cost_analysis counts scan
                                      # bodies once; unrolled counts all)
@@ -179,7 +181,9 @@ def _attn_kw(cfg: ModelConfig, kind: str, rc: RunConfig):
 def _apply_moe_ffn(bp, x, cfg: ModelConfig, rc: RunConfig, mode: str):
     dcfg = dispatch_config(cfg.moe, impl=rc.moe_impl,
                            fuse_gate_up=rc.fuse_gate_up,
-                           fold_combine=rc.fold_combine)
+                           fold_combine=rc.fold_combine,
+                           schedule_policy=rc.schedule_policy,
+                           capacity_factor=rc.capacity_factor)
     if rc.ep:
         from repro.core.distributed import apply_moe_ep
         layout = "replicated" if mode == "decode" else "sharded"

@@ -1,0 +1,99 @@
+"""``capacity_factor`` policy: bounded per-expert capacity with overflow drops.
+
+The distributed-dispatch analogue of skew handling (GShard semantics, already
+sketched by the EP sharded path and benchmarks/skew_sensitivity.py): every
+expert gets a *static* tile-aligned bucket of
+
+    cap = round_up(max(1, T * k * capacity_factor / E), block_m)
+
+rows; assignments beyond an expert's bucket are dropped first-come-first-kept
+(stable in token order).  Dropped assignments contribute exactly zero to the
+layer output — their ``pos`` points at a permanently-inactive sentinel block —
+so the model's residual stream passes the token through unchanged (the
+"residual pass-through": y = x + moe(x) degrades to y = x for fully-dropped
+tokens rather than corrupting them).
+
+Unlike ``fixed``, total capacity is load-independent (E * cap + block_m), so
+a rank's memory and grid never vary with routing — the property the EP
+all-to-all layout requires.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.scheduling.base import BlockSchedule, register_policy, round_up
+
+
+def expert_capacity(n_tokens: int, top_k: int, n_experts: int, block_m: int,
+                    capacity_factor: float) -> int:
+    """Static tile-aligned per-expert row budget (shared with the EP path)."""
+    return round_up(max(1, int(n_tokens * top_k * capacity_factor
+                               / n_experts)), block_m)
+
+
+def capacity_slots(flat: jnp.ndarray, n_experts: int):
+    """Rank of each expanded assignment within its expert, stable in token
+    order.  flat: (T*k,) int32 -> (slot (T*k,) int32, counts (E,) int32).
+
+    ``slot < cap`` is the keep mask under a bucket of ``cap`` rows — the
+    exact first-come-first-kept semantics of the EP send-buffer layout
+    (core/distributed.py), factored here so single-device and distributed
+    dispatch share one definition of "which token gets dropped".
+    """
+    n = flat.shape[0]
+    sort_idx = jnp.argsort(flat, stable=True)
+    counts = jnp.bincount(flat, length=n_experts).astype(jnp.int32)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(counts)]).astype(jnp.int32)
+    ranks = jnp.arange(n, dtype=jnp.int32)
+    slot_sorted = ranks - starts[flat[sort_idx]]
+    slot = jnp.zeros((n,), jnp.int32).at[sort_idx].set(slot_sorted)
+    return slot, counts
+
+
+@register_policy("capacity_factor")
+def build_capacity_schedule(indices: jnp.ndarray, n_experts: int,
+                            block_m: int, *,
+                            capacity_factor: float = 2.0,
+                            cap: int | None = None) -> BlockSchedule:
+    """``cap`` overrides the derived per-expert bucket — used by the EP
+    replicated path, where the bucket must be sized over the GLOBAL expert
+    count, not the rank-local experts + sentinel."""
+    T, k = indices.shape
+    E, M = n_experts, block_m
+    if cap is None:
+        cap = expert_capacity(T, k, E, M, capacity_factor)
+    capacity = E * cap + M              # + one sentinel block for drops
+    num_blocks = capacity // M
+    bpe = cap // M                      # blocks per expert bucket
+
+    flat = indices.reshape(-1).astype(jnp.int32)
+    slot, counts = capacity_slots(flat, E)
+    keep = slot < cap
+    dest = jnp.where(keep, flat * cap + slot, E * cap)     # drops -> sentinel
+    pos = dest.reshape(T, k)
+
+    src_rows = jnp.arange(T * k, dtype=jnp.int32) // k
+    src_tok = jnp.full((capacity,), -1, jnp.int32).at[
+        jnp.where(keep, dest, capacity)].set(src_rows, mode="drop")
+
+    bidx = jnp.arange(num_blocks, dtype=jnp.int32)
+    block_expert = jnp.minimum(bidx // bpe, E - 1)
+    kept_counts = jnp.minimum(counts, cap)
+    start_in_bucket = bidx * M - block_expert * cap
+    block_active = ((bidx < E * bpe)
+                    & (start_in_bucket < kept_counts[block_expert])
+                    ).astype(jnp.int32)
+
+    group_offsets = (jnp.arange(E + 1, dtype=jnp.int32) * cap)
+    return BlockSchedule(
+        counts=counts,
+        group_offsets=group_offsets,
+        src_tok=src_tok,
+        pos=pos,
+        block_expert=block_expert,
+        block_active=block_active,
+        capacity=capacity,
+        block_m=M,
+        seg_start=group_offsets[:-1],
+    )

@@ -1,0 +1,75 @@
+"""``fixed`` policy: the paper's tile-aligned schedule (Algorithm 1, TPU form).
+
+The paper computes the (expert_id, token_offset) block list on the host (its
+Limitation 2 — a host/device sync per layer).  On TPU the schedule is built
+with jnp primitives and consumed by the grouped-GEMM kernels as
+scalar-prefetch operands, so there is no host round-trip.
+
+TPU grids are static, so instead of the paper's dynamic block list we use
+*tile-aligned expert segments*: the permutation places expert ``e``'s tokens
+at a ``block_m``-aligned base offset.  Every M-tile then belongs to exactly
+one expert and the static worst-case capacity is
+
+    capacity = round_up(T*k, block_m) + n_experts * block_m
+
+(each expert can waste at most one partial tile — the same asymptotic waste
+as the paper's masked partial tiles).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.scheduling.base import BlockSchedule, register_policy, round_up
+
+
+def schedule_capacity(n_tokens: int, top_k: int, n_experts: int,
+                      block_m: int) -> int:
+    return round_up(n_tokens * top_k, block_m) + n_experts * block_m
+
+
+@register_policy("fixed")
+def build_fixed_schedule(indices: jnp.ndarray, n_experts: int,
+                         block_m: int) -> BlockSchedule:
+    """indices: (T, k) int32 expert assignment per token. All on-device."""
+    T, k = indices.shape
+    E, M = n_experts, block_m
+    capacity = schedule_capacity(T, k, E, M)
+    num_blocks = capacity // M
+
+    flat = indices.reshape(-1).astype(jnp.int32)              # (T*k,)
+    sort_idx = jnp.argsort(flat, stable=True)                 # expanded ids by expert
+    counts = jnp.bincount(flat, length=E).astype(jnp.int32)   # (E,)
+    padded_counts = (counts + M - 1) // M * M
+    padded_starts = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(padded_counts)]).astype(jnp.int32)
+    unpadded_starts = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)]).astype(jnp.int32)
+
+    ranks = jnp.arange(T * k, dtype=jnp.int32)
+    expert_sorted = flat[sort_idx]
+    dest = (padded_starts[expert_sorted]
+            + ranks - unpadded_starts[expert_sorted])          # (T*k,) padded rows
+
+    pos = jnp.zeros((T * k,), jnp.int32).at[sort_idx].set(dest).reshape(T, k)
+    src_tok = jnp.full((capacity,), -1, jnp.int32).at[dest].set(
+        sort_idx // k, mode="drop")
+
+    block_starts = jnp.arange(num_blocks, dtype=jnp.int32) * M
+    padded_ends = jnp.cumsum(padded_counts)                   # (E,)
+    block_expert = jnp.searchsorted(
+        padded_ends, block_starts, side="right").astype(jnp.int32)
+    total_padded = padded_ends[-1] if E > 0 else jnp.int32(0)
+    block_active = (block_starts < total_padded).astype(jnp.int32)
+    block_expert = jnp.minimum(block_expert, E - 1)
+
+    return BlockSchedule(
+        counts=counts,
+        group_offsets=padded_starts,
+        src_tok=src_tok,
+        pos=pos,
+        block_expert=block_expert,
+        block_active=block_active,
+        capacity=capacity,
+        block_m=M,
+        seg_start=padded_starts[:-1],
+    )

@@ -33,7 +33,11 @@ class ServeEngine:
                  capacity: int = 256, rc: Optional[RunConfig] = None):
         self.cfg = cfg
         self.params = params
-        self.rc = rc or RunConfig(q_chunk=64, kv_chunk=64)
+        # serving default: the dynamic schedule policy — production traffic
+        # is skewed and decode batches are small, exactly the regime where
+        # the fixed tile layout pads worst (DESIGN.md §3)
+        self.rc = rc or RunConfig(q_chunk=64, kv_chunk=64,
+                                  schedule_policy="dynamic")
         self.slots = slots
         self.capacity = capacity
         # one single-sequence cache per slot (slot caches stay independent
@@ -96,12 +100,12 @@ class ServeEngine:
         return n
 
     def run(self, requests: List[Request], max_steps: int = 512):
+        """Drive admission + decode until done (or the step budget runs out);
+        returns the completed requests in submission order."""
         pending = list(requests)
-        done: List[Request] = []
         for _ in range(max_steps):
             while pending and self.admit(pending[0]):
                 pending.pop(0)
             if self.step() == 0 and not pending:
                 break
-            done = [r for r in requests if r.done]
-        return [r for r in requests]
+        return [r for r in requests if r.done]

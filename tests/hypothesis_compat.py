@@ -1,0 +1,38 @@
+"""Optional-hypothesis shim.
+
+When hypothesis is installed (requirements-dev.txt) this re-exports the
+real API.  When it is not, ``@given`` replaces the test with a skipped
+placeholder and ``st``/``settings`` become inert stand-ins, so the plain
+pytest tests sharing a module with property tests still run — instead of
+the whole module failing at collection on the import.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*_a, **_k):
+        def deco(fn):
+            @pytest.mark.skip(reason="hypothesis not installed "
+                              "(pip install -r requirements-dev.txt)")
+            def placeholder():
+                pass
+            placeholder.__name__ = fn.__name__
+            placeholder.__doc__ = fn.__doc__
+            return placeholder
+        return deco
+
+    def settings(*_a, **_k):
+        return lambda fn: fn
+
+    class _Strategies:
+        """Every strategy becomes a callable returning an inert callable
+        (so ``@st.composite`` definitions still evaluate at import)."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: (lambda *a2, **k2: None)
+
+    st = _Strategies()

@@ -28,13 +28,14 @@ from repro.core import apply_moe, dispatch_config, init_moe_params
 from repro.core.distributed import apply_moe_ep
 from repro.configs.base import MoEConfig
 from repro.launch.mesh import make_debug_mesh
+from repro.compat import set_mesh, shard_map
 mesh = make_debug_mesh(data=2, model=4)
 moe = MoEConfig(n_experts=8, top_k=2, d_ff_expert=32, n_shared_experts=1, block_m=8)
 params = init_moe_params(jax.random.key(0), moe, 16)
 x = jax.random.normal(jax.random.key(1), (4, 32, 16))
 dcfg = dispatch_config(moe, impl="xla")
 y_ref, _ = apply_moe(params, x, dcfg)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     y_ep, _ = jax.jit(lambda p, x: apply_moe_ep(p, x, dcfg, capacity_factor=8.0))(params, x)
     y_r, _ = jax.jit(lambda p, x: apply_moe_ep(p, x, dcfg, token_layout="replicated"))(params, x)
 np.testing.assert_allclose(np.asarray(y_ep), np.asarray(y_ref), rtol=2e-4, atol=2e-4)
@@ -50,22 +51,54 @@ from repro.core import dispatch_config, init_moe_params
 from repro.core.distributed import apply_moe_ep
 from repro.configs.base import MoEConfig
 from repro.launch.mesh import make_debug_mesh
+from repro.compat import set_mesh, shard_map
 mesh = make_debug_mesh(data=1, model=4)
 moe = MoEConfig(n_experts=4, top_k=1, d_ff_expert=16, block_m=8)
 params = init_moe_params(jax.random.key(0), moe, 8)
 x = jax.random.normal(jax.random.key(1), (1, 64, 8))
 dcfg = dispatch_config(moe, impl="xla")
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     tight, _ = jax.jit(lambda p, x: apply_moe_ep(p, x, dcfg, capacity_factor=0.25))(params, x)
     loose, _ = jax.jit(lambda p, x: apply_moe_ep(p, x, dcfg, capacity_factor=8.0))(params, x)
 t, l = np.asarray(tight), np.asarray(loose)
 dropped_rows = (np.abs(t).sum(-1) == 0).sum()
 assert dropped_rows > 0, "tight capacity must drop some tokens"
 # run twice -> identical (deterministic drop policy: lowest slot wins)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     tight2, _ = jax.jit(lambda p, x: apply_moe_ep(p, x, dcfg, capacity_factor=0.25))(params, x)
 np.testing.assert_array_equal(t, np.asarray(tight2))
 print("OK", int(dropped_rows))
+""")
+
+
+def test_ep_replicated_schedule_policies_match_single_device():
+    """capacity_factor / dynamic policies under EP replicated dispatch ==
+    the same policy on a single device (global-capacity drop semantics)."""
+    run_sub("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import apply_moe, dispatch_config, init_moe_params
+from repro.configs.base import MoEConfig
+from repro.core.distributed import apply_moe_ep
+from repro.launch.mesh import make_debug_mesh
+from repro.compat import set_mesh
+mesh = make_debug_mesh(data=1, model=4)
+moe = MoEConfig(n_experts=8, top_k=2, d_ff_expert=32, block_m=8,
+                capacity_factor=0.5)
+params = init_moe_params(jax.random.key(0), moe, 16)
+x = jax.random.normal(jax.random.key(1), (1, 64, 16))
+for pol in ("capacity_factor", "dynamic"):
+    dcfg = dispatch_config(moe, impl="xla", schedule_policy=pol)
+    y_ref, _ = apply_moe(params, x, dcfg)
+    if pol == "capacity_factor":
+        assert float(jnp.max(jnp.abs(
+            y_ref - apply_moe(params, x, dcfg._replace(impl="dense"))[0]
+        ))) > 1e-6, "cf=0.5 must actually drop tokens"
+    with set_mesh(mesh):
+        y_r, _ = jax.jit(lambda p, x: apply_moe_ep(
+            p, x, dcfg, token_layout="replicated"))(params, x)
+    np.testing.assert_allclose(np.asarray(y_r), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+print("OK")
 """)
 
 
@@ -80,6 +113,7 @@ from repro.train.step import init_train_state, make_train_step
 from repro.optim.adamw import OptConfig
 from repro.data.pipeline import make_batch
 from repro.launch.mesh import make_debug_mesh
+from repro.compat import set_mesh, shard_map
 from repro.distributed.sharding import param_specs, batch_specs
 from repro.distributed.ctx import use_rules
 from repro.distributed.sharding import activation_rules
@@ -98,7 +132,7 @@ ss = {"params": ps, "opt": {"m": ps, "v": ps, "step": P()}}
 bs = batch_specs(cfg, mesh, "train", 8)
 ns = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
                             is_leaf=lambda x: isinstance(x, P))
-with jax.set_mesh(mesh), use_rules(mesh, activation_rules(cfg, mesh, "train", 8)):
+with set_mesh(mesh), use_rules(mesh, activation_rules(cfg, mesh, "train", 8)):
     f = jax.jit(make_train_step(cfg, rc, opt, 1),
                 in_shardings=(ns(ss), ns(bs)), out_shardings=(ns(ss), None))
     s_sh, m_sh = f(jax.device_put(state, ns(ss)),
@@ -118,6 +152,7 @@ import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint.manager import CheckpointManager
 from repro.launch.mesh import make_debug_mesh
+from repro.compat import set_mesh, shard_map
 m = CheckpointManager(r"{tmp_path}", async_save=False)
 state = {{"w": jnp.arange(32.0).reshape(8, 4), "step": jnp.int32(7)}}
 m.save(7, state)
@@ -137,12 +172,13 @@ import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.optim.compress import compressed_psum
 from repro.launch.mesh import make_debug_mesh
+from repro.compat import set_mesh, shard_map
 mesh = make_debug_mesh(data=1, model=1, pod=8)
 g = jax.random.normal(jax.random.key(0), (8, 64))
 def body(gl):
     return compressed_psum(gl[0], "pod")[None]
-with jax.set_mesh(mesh):
-    out = jax.jit(jax.shard_map(body, mesh=mesh,
+with set_mesh(mesh):
+    out = jax.jit(shard_map(body, mesh=mesh,
         in_specs=P("pod", None), out_specs=P("pod", None)))(g)
 ref = jnp.sum(g, 0)
 got = np.asarray(out)[0]
@@ -159,6 +195,7 @@ import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.models.attention import flash_attention, combine_stats, naive_attention
 from repro.launch.mesh import make_debug_mesh
+from repro.compat import set_mesh, shard_map
 mesh = make_debug_mesh(data=2, model=4)
 B, S, H, D = 4, 64, 4, 16
 ks = jax.random.split(jax.random.key(0), 3)
@@ -174,11 +211,11 @@ def local(q, k, v):
                                 return_stats=True)
     out = combine_stats(acc, l, m, "model")
     return jnp.moveaxis(out, 3, 1).reshape(q.shape[0], 1, -1, out.shape[-1])
-with jax.set_mesh(mesh):
-    f = jax.jit(jax.shard_map(local, mesh=mesh,
+with set_mesh(mesh):
+    f = jax.jit(shard_map(local, mesh=mesh,
         in_specs=(P("data", None, None, None), P("data", "model", None, None),
                   P("data", "model", None, None)),
-        out_specs=P("data", None, None, None), check_vma=False))
+        out_specs=P("data", None, None, None)))
     out = f(q, k, v)
 ref = naive_attention(q, k, v, causal=False, kv_limit=pos)
 np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=3e-5, atol=3e-5)

@@ -3,7 +3,8 @@ the correctness heart of the paper's Algorithm 1 in its tile-aligned TPU
 form."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+from hypothesis_compat import given, settings, st
 
 from repro.core.schedule import build_schedule, schedule_capacity
 

@@ -42,8 +42,9 @@ def test_slot_reuse_many_requests():
                     max_new=3) for i in range(5)]
     eng = ServeEngine(cfg, params, slots=2, capacity=16, rc=RC)
     done = eng.run(reqs, max_steps=64)
-    assert all(r.done for r in done)
-    assert all(len(r.out) == 3 for r in done)
+    assert len(done) == len(reqs)          # no request lost or unfinished
+    assert all(r.done for r in reqs)
+    assert all(len(r.out) == 3 for r in reqs)
 
 
 def test_engine_decode_isolated_between_slots():
