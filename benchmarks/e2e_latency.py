@@ -38,12 +38,12 @@ def bench_config(name: str, run_dense: bool = True):
         x = jax.random.normal(ks[4], (T, d))
         block_m = min(128, max(8, T * k // E))
         cfg = MoEDispatchConfig(n_experts=E, top_k=k, block_m=block_m,
-                                impl="xla", gating=pc.gating)
+                                executor="xla", gating=pc.gating)
         ours = jax.jit(lambda x: moe_ffn(x, wr, wg, wu, wd, cfg)[0])
         t = time_fn(ours, x)
         emit(f"e2e/{name}/ours/T{T}", t, f"cpu_scaled_1_{SCALE}")
         if run_dense and E <= 64:
-            dense_cfg = cfg._replace(impl="dense")
+            dense_cfg = cfg._replace(executor="dense")
             base = jax.jit(lambda x: moe_ffn(x, wr, wg, wu, wd, dense_cfg)[0])
             tb = time_fn(base, x)
             emit(f"e2e/{name}/pytorch_ref/T{T}", tb,

@@ -30,7 +30,7 @@ def main():
         x = jax.random.normal(ks[4], (T, d))
         block_m = min(128, max(8, T * k // E))
         cfg = MoEDispatchConfig(n_experts=E, top_k=k, block_m=block_m,
-                                impl="xla")
+                                executor="xla")
         t = time_fn(jax.jit(lambda x: moe_ffn(x, wr, wg, wu, wd, cfg)[0]), x)
         # analytic v5e TFLOPS at FULL dims: weight loading vs compute
         fl = moe_flops(T, k, D_MODEL, d_ffn)

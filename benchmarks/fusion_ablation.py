@@ -31,9 +31,9 @@ def main():
     wd = jax.random.normal(ks[3], (E, f, d)) * 0.1
     x = jax.random.normal(ks[4], (T, d))
 
-    base = MoEDispatchConfig(n_experts=E, top_k=k, block_m=128, impl="xla")
+    base = MoEDispatchConfig(n_experts=E, top_k=k, block_m=128, executor="xla")
     arms = {
-        "a_dense_loop": base._replace(impl="dense"),
+        "a_dense_loop": base._replace(executor="dense"),
         "b_grouped_unfused": base._replace(fuse_gate_up=False,
                                            fold_combine=False),
         "c_grouped_fused": base,

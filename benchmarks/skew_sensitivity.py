@@ -1,6 +1,7 @@
 """Paper §4.7 / Figures 2-3: sensitivity to routing imbalance — extended to
 a head-to-head sweep of the schedule policies (fixed / capacity_factor /
-dynamic; repro.scheduling, DESIGN.md §3).
+dynamic; repro.scheduling, DESIGN.md §3) on any registered executor backend
+(repro.execution, DESIGN.md §6).
 
 Methodology mirrors the paper: the router output is replaced by synthetic
 assignments (uniform, Zipf alpha=1.2, alpha=2.0) with uniform 1/k gating
@@ -15,9 +16,15 @@ distribution, policy) cell we report:
     mechanism behind the paper's Qwen2-MoE regression), block occupancy,
     drop fraction, and top-1 expert share.
 
+The pipeline runs through the executor's phase methods (permute ->
+expert_ffn -> unpermute), so ``--executor pallas`` measures the kernel path
+(interpret mode off-TPU) on exactly the same schedules as ``xla``.
+
 Records are also dumped to results/sched/*.json for analysis/report.py.
 
     PYTHONPATH=src python -m benchmarks.skew_sensitivity [--smoke]
+    PYTHONPATH=src python -m benchmarks.skew_sensitivity --smoke \\
+        --executor pallas
 """
 from __future__ import annotations
 
@@ -30,9 +37,9 @@ import numpy as np
 
 from benchmarks.common import emit, time_fn, zipf_assignments
 from repro.configs.paper import PAPER_CONFIGS
-from repro.core.dispatch import (combine_scale_rows, fused_gate_up_xla,
-                                 grouped_gemm_xla)
-from repro.kernels import ref
+from repro.core.dispatch import MoEDispatchConfig
+from repro.execution import (available_executors, combine_scale_rows,
+                             get_executor)
 from repro.scheduling import (DEFAULT_POLICY_SWEEP, build_schedule,
                               schedule_stats)
 
@@ -41,7 +48,8 @@ ALPHAS = {"uniform": 0.0, "zipf1.2": 1.2, "zipf2.0": 2.0}
 POLICIES = DEFAULT_POLICY_SWEEP
 
 
-def run_config(name: str, n_tokens: int, records: list):
+def run_config(name: str, n_tokens: int, records: list,
+               executor: str = "xla"):
     pc = PAPER_CONFIGS[name]
     d, f = pc.d_model // SCALE, max(pc.d_ffn // SCALE, 8)
     E, k, T = pc.n_experts, pc.top_k, n_tokens
@@ -51,24 +59,30 @@ def run_config(name: str, n_tokens: int, records: list):
     wd = jax.random.normal(ks[3], (E, f, d)) * 0.1
     x = jax.random.normal(ks[4], (T, d))
     block_m = min(128, max(8, T * k // E))
+    ex = get_executor(executor)
+    weights = {"w_gate": wg, "w_up": wu, "w_down": wd}
 
     for dist, alpha in ALPHAS.items():
         w, idx = zipf_assignments(jax.random.key(7), T, k, E, alpha)
 
         for policy, kw in POLICIES:
-            def pipeline(x, idx=idx, w=w, policy=policy, kw=kw):
+            cfg = MoEDispatchConfig(n_experts=E, top_k=k, block_m=block_m,
+                                    executor=executor,
+                                    schedule_policy=policy)
+
+            def pipeline(x, idx=idx, w=w, policy=policy, kw=kw, cfg=cfg):
                 sched = build_schedule(idx, E, block_m, policy=policy, **kw)
-                xp = ref.permute_ref(x, sched)
-                h = fused_gate_up_xla(xp, wg, wu, sched)
-                y = grouped_gemm_xla(h, wd, sched,
-                                     row_scale=combine_scale_rows(sched, w))
-                return ref.unpermute_ref(y, sched, None)
+                xp = ex.permute(x, sched, cfg)
+                y = ex.expert_ffn(xp, weights, sched, cfg,
+                                  row_scale=combine_scale_rows(sched, w))
+                return ex.unpermute(y, sched, None, cfg)
 
             t = time_fn(jax.jit(pipeline), x)
             st = schedule_stats(build_schedule(idx, E, block_m,
                                                policy=policy, **kw))
             rec = {
                 "config": name, "dist": dist, "policy": policy,
+                "executor": executor,
                 "n_tokens": T, "n_experts": E, "top_k": k,
                 "block_m": block_m, "us": t * 1e6,
                 "pad_waste": float(st.pad_waste),
@@ -78,7 +92,7 @@ def run_config(name: str, n_tokens: int, records: list):
                 "n_blocks_active": int(st.n_blocks_active),
             }
             records.append(rec)
-            emit(f"skew/{name}/{dist}/{policy}", t,
+            emit(f"skew/{name}/{dist}/{policy}[{executor}]", t,
                  f"M{block_m};pad_waste={rec['pad_waste']:.2f}x;"
                  f"occ={rec['occupancy']:.1%};"
                  f"drop={rec['drop_fraction']:.1%};"
@@ -86,11 +100,17 @@ def run_config(name: str, n_tokens: int, records: list):
 
 
 def main(argv=None):
+    schedule_capable = [n for n in available_executors()
+                        if get_executor(n).needs_schedule]
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--configs", nargs="*", choices=sorted(PAPER_CONFIGS),
                     default=["mixtral-8x7b", "mixtral-8x22b",
                              "qwen2-moe-57b", "deepseek-v3"])
     ap.add_argument("--tokens", type=int, default=512)
+    ap.add_argument("--executor", default="xla", choices=schedule_capable,
+                    help="backend whose phase methods run the pipeline "
+                         "(schedule-free executors such as 'dense' have "
+                         "no permuted layout to measure)")
     ap.add_argument("--smoke", action="store_true",
                     help="one tiny config (CI): mixtral-8x7b at 64 tokens")
     ap.add_argument("--out", default="results/sched",
@@ -103,8 +123,10 @@ def main(argv=None):
     out_dir.mkdir(parents=True, exist_ok=True)
     for name in args.configs:
         records: list = []
-        run_config(name, args.tokens, records)
-        (out_dir / f"{name}.json").write_text(json.dumps(records, indent=1))
+        run_config(name, args.tokens, records, executor=args.executor)
+        suffix = "" if args.executor == "xla" else f".{args.executor}"
+        (out_dir / f"{name}{suffix}.json").write_text(
+            json.dumps(records, indent=1))
 
         # sanity echoed for the acceptance criterion: dynamic never pads
         # more than fixed

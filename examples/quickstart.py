@@ -45,19 +45,37 @@ def main():
                          block_n=32, block_k=64)
     out_pallas = ops.unpermute(y, sched, None)                      # 5 unperm
 
-    # ---- whole-layer API, three implementations ----
+    # ---- whole-layer API, every registered executor backend ----
+    from repro.execution import available_executors, execute, plan_dispatch
     outs = {}
-    for impl in ("dense", "xla", "pallas"):
+    for name in available_executors():
         y_full, aux = apply_moe(params, x[None],
-                                dispatch_config(moe, impl=impl))
-        outs[impl] = np.asarray(y_full[0])
-    for impl in ("xla", "pallas"):
-        np.testing.assert_allclose(outs["dense"], outs[impl],
+                                dispatch_config(moe, executor=name))
+        outs[name] = np.asarray(y_full[0])
+    for name in ("xla", "pallas"):
+        np.testing.assert_allclose(outs["dense"], outs[name],
                                    rtol=2e-4, atol=2e-4)
-    # the stage-by-stage pipeline equals the routed part of the layer
-    shared_out = outs["dense"] - np.asarray(out_pallas)
-    print("impl equivalence: dense == xla == pallas  (max |delta| = "
-          f"{max(np.abs(outs['dense'] - outs[impl]).max() for impl in ('xla', 'pallas')):.2e})")
+    print("executor equivalence: dense == xla == pallas  (max |delta| = "
+          f"{max(np.abs(outs['dense'] - outs[n]).max() for n in ('xla', 'pallas')):.2e})")
+
+    # the stage-by-stage pipeline above equals the routed part of the layer
+    routed = {k: v for k, v in params.items() if k != "shared"}
+    y_routed, _ = apply_moe(routed, x[None],
+                            dispatch_config(moe, executor="pallas"))
+    np.testing.assert_allclose(np.asarray(y_routed[0]),
+                               np.asarray(out_pallas), rtol=2e-4, atol=2e-4)
+    print("stage-by-stage pipeline == routed experts of apply_moe")
+
+    # ---- plan/execute split: ONE plan consumed by two backends ----
+    cfg = dispatch_config(moe, executor="xla")
+    w = {k: params[k] for k in ("w_gate", "w_up", "w_down")}
+    plan = plan_dispatch(x, params["router"], cfg)
+    y_xla = execute(plan, x, w, cfg)                      # cfg's executor
+    y_pal = execute(plan, x, w, cfg, executor="pallas")   # same plan, kernels
+    np.testing.assert_allclose(np.asarray(y_xla), np.asarray(y_pal),
+                               rtol=2e-4, atol=2e-4)
+    print(f"plan reuse: xla and pallas agree on one DispatchPlan "
+          f"({plan.schedule.capacity}-row schedule built once)")
     print(f"aux: load-balance={float(aux['lb_loss']):.3f} "
           f"router-z={float(aux['router_z']):.3f}")
     print("OK")

@@ -45,13 +45,15 @@ def scheduling_table():
     if not recs:
         return ("_(no records — run ``PYTHONPATH=src python -m "
                 "benchmarks.skew_sensitivity`` to populate results/sched/)_")
-    rows = ["| config | dist | policy | M | pad waste | occupancy | "
-            "drop | CPU us |",
-            "|" + "---|" * 8]
+    rows = ["| config | dist | policy | executor | M | pad waste | "
+            "occupancy | drop | CPU us |",
+            "|" + "---|" * 9]
     for r in sorted(recs, key=lambda r: (r["config"], r["dist"],
-                                         _POLICY_ORDER.get(r["policy"], 9))):
+                                         _POLICY_ORDER.get(r["policy"], 9),
+                                         r.get("executor", "xla"))):
         rows.append(
             f"| {r['config']} | {r['dist']} | {r['policy']} | "
+            f"{r.get('executor', 'xla')} | "
             f"{r['block_m']} | {r['pad_waste']:.2f}x | "
             f"{r['occupancy']:.1%} | {r['drop_fraction']:.1%} | "
             f"{r['us']:.0f} |")

@@ -1,4 +1,5 @@
 """Core: the paper's MoE dispatch pipeline as a composable JAX module."""
-from repro.core.dispatch import MoEDispatchConfig, moe_ffn  # noqa: F401
+from repro.core.dispatch import (DispatchPlan, MoEDispatchConfig,  # noqa: F401
+                                 execute, moe_ffn, plan_dispatch)
 from repro.core.moe_layer import apply_moe, dispatch_config, init_moe_params  # noqa: F401
 from repro.core.schedule import BlockSchedule, build_schedule, schedule_capacity  # noqa: F401

@@ -1,203 +1,101 @@
-"""Single-device MoE dispatch pipeline (the paper's end-to-end §3.1).
+"""Single-device MoE dispatch (the paper's end-to-end §3.1) — thin shim.
 
     router logits -> gating/top-k -> schedule -> permute
       -> fused gate+up grouped GEMM -> down grouped GEMM (fused combine scale)
       -> unpermute
 
-Three interchangeable implementations of the grouped compute:
+The pipeline is split into two phases (DESIGN.md §6; repro.execution):
+`plan_dispatch` builds a backend-independent `DispatchPlan` (routing,
+`BlockSchedule`, combine-scale rows, aux/telemetry) once per batch, and a
+registered `Executor` backend runs it.  Three executors ship built-in:
 
-* ``impl="pallas"``  — the paper's technique as Pallas TPU kernels
+* ``executor="pallas"`` — the paper's technique as Pallas TPU kernels
   (kernels/).  Runs in interpret mode off-TPU.  Inference-path (forward).
-* ``impl="xla"``     — the SAME block schedule executed as a
+* ``executor="xla"``    — the SAME block schedule executed as a
   ``lax.scan`` over M-tiles with per-step expert-weight gathers.  Pure
-  jnp: differentiable (training path), memory-lean (no (blocks, K, N)
-  weight gather blow-up), compiles at full scale on any backend — this is
-  what the multi-pod dry-run lowers.  Structurally identical traffic to
-  the kernel, so its roofline terms are representative.
-* ``impl="dense"``   — one-hot dense-over-all-experts oracle (the paper's
-  "PyTorch reference" baseline; used by tests and small benchmarks).
+  jnp: differentiable (training path), memory-lean, compiles at full scale
+  on any backend — this is what the multi-pod dry-run lowers.
+* ``executor="dense"``  — one-hot dense-over-all-experts oracle (the
+  paper's "PyTorch reference" baseline; used by tests and benchmarks).
 
 ``fuse_gate_up=False`` reproduces the paper's unfused ablation arm
-(Table 4b): two separate grouped GEMMs whose outputs round-trip HBM.
-``fold_combine=True`` applies the top-k combine weights inside the down
-projection's epilogue instead of at unpermute (beyond-paper; see DESIGN.md).
-
+(Table 4b); ``fold_combine=True`` applies the top-k combine weights inside
+the down projection's epilogue (beyond-paper; DESIGN.md §2).
 ``schedule_policy`` selects how the block schedule is constructed
-(repro.scheduling; DESIGN.md §3): ``fixed`` (the paper), ``capacity_factor``
-(bounded buckets + overflow drops), or ``dynamic`` (adaptive block-to-expert
-assignment under skew — the serving default).
+(repro.scheduling; DESIGN.md §3) — backend, schedule policy, and
+distribution layout (core/distributed.py) compose orthogonally.
+
+This module keeps the historical `moe_ffn` entry point and re-exports the
+helpers older call sites import from here.
 """
 from __future__ import annotations
 
 from typing import NamedTuple, Optional
 
-import jax
 import jax.numpy as jnp
 
-from repro.distributed.ctx import constrain
-from repro.kernels import ops, ref
-from repro.scheduling import BlockSchedule, build_schedule, schedule_stats
+from repro.execution import (DispatchPlan, combine_scale_rows,  # noqa: F401
+                             execute, get_executor, plan_dispatch,
+                             plan_schedule, router_aux_losses)
+from repro.execution import fused_gate_up_xla, grouped_gemm_xla  # noqa: F401
+from repro.scheduling import BlockSchedule, policy_config_kwargs
+
+# historical private name, still imported by older call sites
+_aux_losses = router_aux_losses
 
 
 class MoEDispatchConfig(NamedTuple):
     n_experts: int
     top_k: int
     block_m: int = 128
-    impl: str = "xla"              # pallas | xla | dense
+    executor: str = "xla"          # any repro.execution registered backend
     fuse_gate_up: bool = True
     fold_combine: bool = True
     gating: str = "softmax"
     norm_topk: bool = False
     routed_scale: float = 1.0
     interpret: Optional[bool] = None
-    schedule_policy: str = "fixed"   # fixed | capacity_factor | dynamic
+    schedule_policy: str = "fixed"   # any repro.scheduling registered policy
     capacity_factor: float = 2.0     # capacity_factor policy: bucket headroom
     block_m_min: int = 8             # dynamic policy: sub-block granularity
-    emit_stats: bool = False         # add ScheduleStats scalars to aux (off in
-                                     # the layer scan: aux is a fixed carry)
+    emit_stats: bool = False         # add ScheduleStats scalars to aux (needs
+                                     # RunConfig.moe_stats in the layer scan:
+                                     # aux is a fixed carry)
+
+    @property
+    def impl(self) -> str:
+        """Deprecated alias for ``executor`` (pre-registry field name)."""
+        return self.executor
 
 
 def schedule_kwargs(cfg: MoEDispatchConfig) -> dict:
-    """Per-policy construction kwargs from the dispatch config."""
-    if cfg.schedule_policy == "capacity_factor":
-        return {"capacity_factor": cfg.capacity_factor}
-    if cfg.schedule_policy == "dynamic":
-        return {"block_m_min": cfg.block_m_min}
-    return {}
+    """Per-policy construction kwargs — each policy declares the config
+    fields it consumes (scheduling/base.py); kept for older call sites."""
+    return policy_config_kwargs(cfg.schedule_policy, cfg)
 
 
 def build_dispatch_schedule(indices: jnp.ndarray,
                             cfg: MoEDispatchConfig) -> BlockSchedule:
     """The configured policy's schedule for this batch's routing."""
-    return build_schedule(indices, cfg.n_experts, cfg.block_m,
-                          policy=cfg.schedule_policy, **schedule_kwargs(cfg))
+    return plan_schedule(indices, cfg)
 
 
-# ----------------------------------------------------------------------
-# XLA scan-over-blocks grouped compute (differentiable)
-# ----------------------------------------------------------------------
-def _gemm_blocks_xla(x: jnp.ndarray, sched: BlockSchedule, step_fn):
-    M = sched.block_m
-    nb = sched.capacity // M
-    xb = x.reshape(nb, M, x.shape[-1])
-
-    def step(_, inp):
-        xblk, be, active = inp
-        out = step_fn(xblk, be)
-        out = out * active.astype(out.dtype)
-        return None, out
-
-    _, out = jax.lax.scan(step, None,
-                          (xb, sched.block_expert, sched.block_active))
-    return out.reshape(sched.capacity, -1)
-
-
-def fused_gate_up_xla(x, w_gate, w_up, sched: BlockSchedule):
-    def step(xblk, be):
-        wg = w_gate[be]
-        wu = w_up[be]
-        g = jnp.dot(xblk, wg, preferred_element_type=jnp.float32)
-        u = jnp.dot(xblk, wu, preferred_element_type=jnp.float32)
-        return ((g * jax.nn.sigmoid(g)) * u).astype(x.dtype)
-    return _gemm_blocks_xla(x, sched, step)
-
-
-def grouped_gemm_xla(x, w, sched: BlockSchedule, row_scale=None):
-    out = _gemm_blocks_xla(
-        x, sched,
-        lambda xblk, be: jnp.dot(xblk, w[be],
-                                 preferred_element_type=jnp.float32
-                                 ).astype(x.dtype))
-    if row_scale is not None:
-        out = out * row_scale[:, None].astype(out.dtype)
-    return out
-
-
-# ----------------------------------------------------------------------
 def route(x: jnp.ndarray, w_router: jnp.ndarray, cfg: MoEDispatchConfig):
     """Router projection (XLA — near-optimal small-N GEMM, as in the paper)
-    + fused gating/top-k. Returns (weights, indices, probs-for-aux)."""
+    + the executor's gating/top-k. Returns (weights, indices, probs-for-aux)."""
     logits = jnp.dot(x.astype(jnp.float32), w_router.astype(jnp.float32))
-    if cfg.impl == "pallas":
-        weights, indices = ops.router_topk(
-            logits, top_k=cfg.top_k, gating=cfg.gating,
-            norm_topk=cfg.norm_topk, routed_scale=cfg.routed_scale,
-            interpret=cfg.interpret)
-    else:
-        weights, indices = ref.router_ref(
-            logits, cfg.top_k, gating=cfg.gating,
-            norm_topk=cfg.norm_topk, routed_scale=cfg.routed_scale)
+    weights, indices = get_executor(cfg.executor).route(logits, cfg)
     return weights, indices, logits
-
-
-def combine_scale_rows(sched: BlockSchedule, weights: jnp.ndarray):
-    """Scatter the (T, k) combine weights onto padded rows for the fused
-    down-projection epilogue. Padding rows get 0."""
-    scale = jnp.zeros((sched.capacity,), jnp.float32)
-    return scale.at[sched.pos.reshape(-1)].set(
-        weights.reshape(-1).astype(jnp.float32), mode="drop")
 
 
 def moe_ffn(x: jnp.ndarray, w_router: jnp.ndarray, w_gate: jnp.ndarray,
             w_up: jnp.ndarray, w_down: jnp.ndarray,
             cfg: MoEDispatchConfig):
-    """Full dispatch pipeline.  x: (T, d) -> (y: (T, d), aux dict)."""
-    weights, indices, logits = route(x, w_router, cfg)
-    aux = _aux_losses(logits, indices, cfg)
+    """Full dispatch pipeline.  x: (T, d) -> (y: (T, d), aux dict).
 
-    if cfg.impl == "dense":
-        y = ref.moe_ffn_dense_ref(x, w_gate, w_up, w_down, weights, indices)
-        return y, aux
-
-    sched = build_dispatch_schedule(indices, cfg)
-    if cfg.emit_stats:
-        aux.update({f"sched/{k}": v
-                    for k, v in schedule_stats(sched)._asdict().items()})
-
-    if cfg.impl == "pallas":
-        xp = ops.permute(x, sched, interpret=cfg.interpret)
-        xp = constrain("moe_dispatch", xp)
-        if cfg.fuse_gate_up:
-            h = ops.fused_gate_up(xp, w_gate, w_up, sched,
-                                  interpret=cfg.interpret)
-        else:
-            g = ops.grouped_gemm(xp, w_gate, sched, interpret=cfg.interpret)
-            u = ops.grouped_gemm(xp, w_up, sched, interpret=cfg.interpret)
-            gf = g.astype(jnp.float32)
-            h = ((gf * jax.nn.sigmoid(gf)) * u.astype(jnp.float32)
-                 ).astype(x.dtype)
-        scale = combine_scale_rows(sched, weights) if cfg.fold_combine else None
-        y = ops.grouped_gemm(h, w_down, sched, row_scale=scale,
-                             interpret=cfg.interpret)
-        y = ops.unpermute(y, sched, None if cfg.fold_combine else weights,
-                          interpret=cfg.interpret)
-    elif cfg.impl == "xla":
-        xp = constrain("moe_dispatch", ref.permute_ref(x, sched))
-        if cfg.fuse_gate_up:
-            h = fused_gate_up_xla(xp, w_gate, w_up, sched)
-        else:
-            g = grouped_gemm_xla(xp, w_gate, sched)
-            u = grouped_gemm_xla(xp, w_up, sched)
-            gf = g.astype(jnp.float32)
-            h = ((gf * jax.nn.sigmoid(gf)) * u.astype(jnp.float32)
-                 ).astype(x.dtype)
-        scale = combine_scale_rows(sched, weights) if cfg.fold_combine else None
-        y = grouped_gemm_xla(h, w_down, sched, row_scale=scale)
-        y = ref.unpermute_ref(y, sched, None if cfg.fold_combine else weights)
-    else:
-        raise ValueError(f"unknown impl {cfg.impl!r}")
-    return y.astype(x.dtype), aux
-
-
-def _aux_losses(logits: jnp.ndarray, indices: jnp.ndarray,
-                cfg: MoEDispatchConfig):
-    """Load-balance + router-z losses (training substrate; the paper is
-    inference-only so these sit outside its measured pipeline)."""
-    probs = jax.nn.softmax(logits, axis=-1)
-    E = cfg.n_experts
-    frac = jnp.mean(
-        jax.nn.one_hot(indices, E, dtype=jnp.float32), axis=(0, 1))
-    mean_prob = jnp.mean(probs, axis=0)
-    lb = E * jnp.sum(frac * mean_prob)
-    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
-    return {"lb_loss": lb, "router_z": z}
+    Equivalent to ``plan_dispatch`` + ``execute`` on ``cfg.executor``; kept
+    as the one-call entry point every model-level consumer uses."""
+    plan = plan_dispatch(x, w_router, cfg)
+    y = execute(plan, x, {"w_gate": w_gate, "w_up": w_up, "w_down": w_down},
+                cfg)
+    return y.astype(x.dtype), plan.aux

@@ -2,19 +2,26 @@
 
 The paper targets single-GPU dispatch and defers multi-device expert
 parallelism (its Limitation 6).  Here the paper's pipeline becomes the
-*per-device inner loop* of a GShard-style EP layer:
+*per-device inner loop* of a GShard-style EP layer.  EP is an *executor
+wrapper*, not a forked pipeline: each rank consumes a `DispatchPlan`
+(routing built once by ``plan_dispatch`` — never re-derived locally) and
+composes the configured executor's phase methods (permute / expert_ffn /
+unpermute, repro.execution) over a rank-local layout.  Any schedule-capable
+backend works under EP unchanged; only the layout between the phases is
+EP-specific:
 
 ``token_layout="sharded"`` (train / prefill — tokens are sequence-sharded
 over the EP axis):
-  local router -> capacity-bucketed send buffers -> all_to_all -> local
-  block-scheduled grouped FFN (static, tile-aligned layout: slot s of rank r
-  belongs to local expert s // C — no dynamic schedule needed at all) ->
+  plan (local router) -> capacity-bucketed send buffers -> all_to_all ->
+  executor.expert_ffn on a static tile-aligned receive layout (slot s of
+  rank r belongs to local expert s // C — no dynamic schedule needed) ->
   all_to_all back -> weighted combine on the source rank.
 
 ``token_layout="replicated"`` (decode — every EP rank sees the same tokens):
-  each rank runs the dispatch pipeline restricted to the experts it owns
-  (non-owned assignments routed to an inactive sentinel expert whose blocks
-  are skipped), then a single psum over the EP axis combines partial outputs
+  each rank restricts the plan's routing to the experts it owns (non-owned
+  assignments routed to an inactive sentinel expert whose blocks are
+  skipped), runs executor permute/expert_ffn/unpermute on that local
+  schedule, then a single psum over the EP axis combines partial outputs
   — the collective is O(B*d) instead of an all_to_all of expert buffers.
 
 Tokens overflowing an expert's capacity bucket are dropped (GShard
@@ -23,7 +30,6 @@ drop/no-drop regimes.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -31,12 +37,11 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import axis_size, current_mesh, shard_map
-from repro.core.dispatch import (MoEDispatchConfig, _aux_losses,
-                                 fused_gate_up_xla, grouped_gemm_xla, route,
-                                 schedule_kwargs)
-from repro.kernels import ops, ref
+from repro.core.dispatch import MoEDispatchConfig
+from repro.execution import (combine_scale_rows, get_executor,
+                             plan_dispatch)
 from repro.scheduling import (BlockSchedule, build_schedule, capacity_slots,
-                              expert_capacity)
+                              expert_capacity, policy_config_kwargs)
 
 
 def _static_schedule(n_rows: int, n_local_experts: int, block_m: int,
@@ -57,31 +62,12 @@ def _static_schedule(n_rows: int, n_local_experts: int, block_m: int,
         capacity=n_rows, block_m=block_m)
 
 
-def _grouped_ffn(x, params, sched: BlockSchedule, cfg: MoEDispatchConfig,
-                 row_scale=None):
-    """The paper's grouped compute (fused gate+up, down) on a schedule."""
-    if cfg.impl == "pallas":
-        if cfg.fuse_gate_up:
-            h = ops.fused_gate_up(x, params["w_gate"], params["w_up"], sched,
-                                  interpret=cfg.interpret)
-        else:
-            g = ops.grouped_gemm(x, params["w_gate"], sched,
-                                 interpret=cfg.interpret)
-            u = ops.grouped_gemm(x, params["w_up"], sched,
-                                 interpret=cfg.interpret)
-            gf = g.astype(jnp.float32)
-            h = ((gf * jax.nn.sigmoid(gf)) * u.astype(jnp.float32)
-                 ).astype(x.dtype)
-        return ops.grouped_gemm(h, params["w_down"], sched,
-                                row_scale=row_scale, interpret=cfg.interpret)
-    if cfg.fuse_gate_up:
-        h = fused_gate_up_xla(x, params["w_gate"], params["w_up"], sched)
-    else:
-        g = grouped_gemm_xla(x, params["w_gate"], sched)
-        u = grouped_gemm_xla(x, params["w_up"], sched)
-        gf = g.astype(jnp.float32)
-        h = ((gf * jax.nn.sigmoid(gf)) * u.astype(jnp.float32)).astype(x.dtype)
-    return grouped_gemm_xla(h, params["w_down"], sched, row_scale=row_scale)
+def _rank_plan(params, x_loc, cfg: MoEDispatchConfig, axis: str):
+    """Routing plan for this rank's tokens + EP-meaned aux.  One plan per
+    batch; both layouts consume it instead of re-deriving routing."""
+    plan = plan_dispatch(x_loc, params["router"], cfg, with_schedule=False)
+    aux = {k: jax.lax.pmean(v, axis) for k, v in plan.aux.items()}
+    return plan._replace(aux=aux)
 
 
 # ----------------------------------------------------------------------
@@ -93,16 +79,14 @@ def _ep_sharded_local(params, x_loc, cfg: MoEDispatchConfig, axis: str,
     E_local = E // ep
     Tl, d = x_loc.shape
 
-    weights, indices, logits = route(x_loc, params["router"], cfg)
-    aux = _aux_losses(logits, indices, cfg)
-    aux = {k_: jax.lax.pmean(v, axis) for k_, v in aux.items()}
+    plan = _rank_plan(params, x_loc, cfg, axis)
 
     # capacity per (expert) bucket, tile-aligned so the receive layout is
     # statically tile-aligned for the grouped GEMM; slot/keep semantics are
     # shared with the single-device capacity_factor policy (scheduling/)
     cap = expert_capacity(Tl, k, E, M, capacity_factor)
 
-    flat = indices.reshape(-1)                               # (Tl*k,)
+    flat = plan.indices.reshape(-1)                          # (Tl*k,)
     slot, _counts = capacity_slots(flat, E)
     keep = slot < cap
     dest = flat * cap + slot                                 # row in send buf
@@ -124,7 +108,7 @@ def _ep_sharded_local(params, x_loc, cfg: MoEDispatchConfig, axis: str,
     from repro.core.quant import effective_expert_weights
     sched = _static_schedule(E_local * ep * cap, E_local, M, ep * cap)
     local_w = effective_expert_weights(params, x_loc.dtype)
-    y = _grouped_ffn(recv, local_w, sched, cfg)
+    y = get_executor(cfg.executor).expert_ffn(recv, local_w, sched, cfg)
 
     # inverse path
     y = y.reshape(E_local, ep, cap, d).transpose(1, 0, 2, 3) \
@@ -133,10 +117,10 @@ def _ep_sharded_local(params, x_loc, cfg: MoEDispatchConfig, axis: str,
     y = y.reshape(E * cap, d)
 
     gathered = y[jnp.minimum(dest, E * cap - 1)]             # (Tl*k, d)
-    w_eff = jnp.where(keep, weights.reshape(-1), 0.0)
+    w_eff = jnp.where(keep, plan.weights.reshape(-1), 0.0)
     out = jnp.sum(gathered.reshape(Tl, k, d).astype(jnp.float32)
                   * w_eff.reshape(Tl, k, 1), axis=1)
-    return out.astype(x_loc.dtype), aux
+    return out.astype(x_loc.dtype), plan.aux
 
 
 def _ep_replicated_local(params, x_loc, cfg: MoEDispatchConfig, axis: str,
@@ -148,20 +132,18 @@ def _ep_replicated_local(params, x_loc, cfg: MoEDispatchConfig, axis: str,
     r = jax.lax.axis_index(axis)
     base = r * E_local
 
-    weights, indices, logits = route(x_loc, params["router"], cfg)
-    aux = _aux_losses(logits, indices, cfg)
-    aux = {k_: jax.lax.pmean(v, axis) for k_, v in aux.items()}
+    plan = _rank_plan(params, x_loc, cfg, axis)
 
-    mine = (indices >= base) & (indices < base + E_local)
+    mine = (plan.indices >= base) & (plan.indices < base + E_local)
     # non-owned assignments -> sentinel expert E_local (blocks deactivated)
-    idx_local = jnp.where(mine, indices - base, E_local)
-    w_masked = jnp.where(mine, weights, 0.0)
+    idx_local = jnp.where(mine, plan.indices - base, E_local)
+    w_masked = jnp.where(mine, plan.weights, 0.0)
 
     # the configured schedule policy, over the local experts plus one
     # sentinel "expert" that absorbs non-owned assignments; capacity buckets
     # must be sized over the GLOBAL expert count so EP drop semantics match
     # the single-device policy exactly
-    kw = schedule_kwargs(cfg)
+    kw = policy_config_kwargs(cfg.schedule_policy, cfg)
     if cfg.schedule_policy == "capacity_factor":
         kw["cap"] = expert_capacity(x_loc.shape[0], cfg.top_k, E, M,
                                     capacity_factor)
@@ -173,17 +155,15 @@ def _ep_replicated_local(params, x_loc, cfg: MoEDispatchConfig, axis: str,
         * (sched.block_expert < E_local).astype(jnp.int32),
         block_expert=jnp.minimum(sched.block_expert, E_local - 1))
 
-    xp = ref.permute_ref(x_loc, sched) if cfg.impl != "pallas" \
-        else ops.permute(x_loc, sched, interpret=cfg.interpret)
-    from repro.core.dispatch import combine_scale_rows
     from repro.core.quant import effective_expert_weights
+    ex = get_executor(cfg.executor)
+    xp = ex.permute(x_loc, sched, cfg)
     scale = combine_scale_rows(sched, w_masked)
     local_w = effective_expert_weights(params, x_loc.dtype)
-    y = _grouped_ffn(xp, local_w, sched, cfg, row_scale=scale)
-    out = ref.unpermute_ref(y, sched, None) if cfg.impl != "pallas" \
-        else ops.unpermute(y, sched, None, interpret=cfg.interpret)
+    y = ex.expert_ffn(xp, local_w, sched, cfg, row_scale=scale)
+    out = ex.unpermute(y, sched, None, cfg)
     out = jax.lax.psum(out.astype(jnp.float32), axis)
-    return out.astype(x_loc.dtype), aux
+    return out.astype(x_loc.dtype), plan.aux
 
 
 # ----------------------------------------------------------------------
@@ -200,6 +180,10 @@ def apply_moe_ep(params, x: jnp.ndarray, cfg: MoEDispatchConfig, *,
     layout (the all-to-all needs load-independent buffers), so
     ``cfg.schedule_policy`` applies to the replicated (decode) layout and
     single-device dispatch only — the sharded path ignores it by design.
+
+    ``cfg.executor`` must name a schedule-capable backend (phase-level
+    permute/expert_ffn/unpermute) — ``xla`` or ``pallas``; the ``dense``
+    oracle has no permuted layout and raises under EP.
 
     Shared experts are dense compute on (sharded) tokens — they stay in
     plain GSPMD-land outside the shard_map.

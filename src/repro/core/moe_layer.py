@@ -35,31 +35,36 @@ def init_moe_params(key, moe: MoEConfig, d_model: int, dtype=jnp.float32):
     return params
 
 
-def dispatch_config(moe: MoEConfig, *, impl: str = "xla",
+def dispatch_config(moe: MoEConfig, *, executor: str | None = None,
+                    impl: str | None = None,
                     fuse_gate_up: bool = True, fold_combine: bool = True,
                     schedule_policy: str = "fixed",
                     capacity_factor: float | None = None,
-                    block_m_min: int = 8,
+                    block_m_min: int = 8, emit_stats: bool = False,
                     interpret=None) -> MoEDispatchConfig:
+    """``executor`` names a registered backend (repro.execution); ``impl``
+    is the deprecated pre-registry alias for it."""
     return MoEDispatchConfig(
         n_experts=moe.n_experts, top_k=moe.top_k, block_m=moe.block_m,
-        impl=impl, fuse_gate_up=fuse_gate_up, fold_combine=fold_combine,
+        executor=(executor or impl or "xla"),
+        fuse_gate_up=fuse_gate_up, fold_combine=fold_combine,
         gating=moe.gating, norm_topk=moe.norm_topk,
         routed_scale=moe.routed_scale, interpret=interpret,
         schedule_policy=schedule_policy,
         capacity_factor=(moe.capacity_factor if capacity_factor is None
                          else capacity_factor),
-        block_m_min=block_m_min)
+        block_m_min=block_m_min, emit_stats=emit_stats)
 
 
 def apply_moe(params, x: jnp.ndarray, cfg: MoEDispatchConfig):
     """x: (..., d) -> (y, aux). Flattens leading dims for dispatch."""
     from repro.core.quant import effective_expert_weights, is_quantized
+    from repro.execution import get_executor
     shape = x.shape
     x2 = x.reshape(-1, shape[-1])
     w = effective_expert_weights(params, x.dtype)
-    if is_quantized(params) and cfg.impl != "xla":
-        # dense oracle / pallas paths need materialized arrays
+    if is_quantized(params) and get_executor(cfg.executor).materialize_quant:
+        # e.g. the dense oracle / pallas kernels need materialized arrays
         w = {k: v[jnp.arange(v.shape[0])] for k, v in w.items()}
     y, aux = moe_ffn(x2, params["router"], w["w_gate"],
                      w["w_up"], w["w_down"], cfg)

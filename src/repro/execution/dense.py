@@ -1,0 +1,23 @@
+"""``dense`` executor: one-hot dense-over-all-experts oracle.
+
+The paper's "PyTorch reference" baseline — every expert computed on every
+token, combined with a routing mask.  O(T*E*ffn) compute, exact semantics;
+the correctness ground truth for tests and small benchmarks.  Consumes
+only ``plan.weights`` / ``plan.indices``: no permuted layout exists, so the
+plan carries no schedule (``needs_schedule = False``) and the phase-level
+methods are intentionally unavailable (the EP paths require a
+schedule-capable executor such as ``xla`` or ``pallas``).
+"""
+from __future__ import annotations
+
+from repro.execution.base import DispatchPlan, Executor, register_executor
+from repro.kernels import ref
+
+
+@register_executor("dense")
+class DenseExecutor(Executor):
+    needs_schedule = False
+
+    def run(self, x, w, plan: DispatchPlan, cfg):
+        return ref.moe_ffn_dense_ref(x, w["w_gate"], w["w_up"], w["w_down"],
+                                     plan.weights, plan.indices)

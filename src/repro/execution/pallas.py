@@ -1,0 +1,45 @@
+"""``pallas`` executor: the paper's technique as Pallas TPU kernels.
+
+The schedule arrays are scalar-prefetch operands, so block-to-expert lookup
+happens in SMEM with no host round-trip.  Runs in interpret mode off-TPU
+(this container validates on CPU); the compiled target is TPU v5e.
+Inference path (forward only).  Routing uses the fused router_topk kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.execution.base import Executor, register_executor
+from repro.kernels import ops
+
+
+@register_executor("pallas")
+class PallasExecutor(Executor):
+
+    def route(self, logits, cfg):
+        return ops.router_topk(
+            logits, top_k=cfg.top_k, gating=cfg.gating,
+            norm_topk=cfg.norm_topk, routed_scale=cfg.routed_scale,
+            interpret=cfg.interpret)
+
+    def permute(self, x, sched, cfg):
+        return ops.permute(x, sched, interpret=cfg.interpret)
+
+    def expert_ffn(self, xp, w, sched, cfg, row_scale=None):
+        if cfg.fuse_gate_up:
+            h = ops.fused_gate_up(xp, w["w_gate"], w["w_up"], sched,
+                                  interpret=cfg.interpret)
+        else:
+            g = ops.grouped_gemm(xp, w["w_gate"], sched,
+                                 interpret=cfg.interpret)
+            u = ops.grouped_gemm(xp, w["w_up"], sched,
+                                 interpret=cfg.interpret)
+            gf = g.astype(jnp.float32)
+            h = ((gf * jax.nn.sigmoid(gf)) * u.astype(jnp.float32)
+                 ).astype(xp.dtype)
+        return ops.grouped_gemm(h, w["w_down"], sched, row_scale=row_scale,
+                                interpret=cfg.interpret)
+
+    def unpermute(self, y, sched, weights, cfg):
+        return ops.unpermute(y, sched, weights, interpret=cfg.interpret)

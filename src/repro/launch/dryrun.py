@@ -32,7 +32,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
              save_hlo: bool = False, accum=None, layout: str = "fsdp",
              pin_grads: bool = False, capacity_factor=None,
              variant: str = "", drop_rules=(),
-             quant_experts: bool = False) -> dict:
+             quant_experts: bool = False, executor: str = None) -> dict:
     import jax
 
     from repro.analysis.hlo import collective_report
@@ -56,6 +56,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     rc = dryrun_runconfig(cfg, shape)
     if capacity_factor is not None:
         rc = rc._replace(capacity_factor=capacity_factor)
+    if executor is not None:
+        rc = rc._replace(executor=executor)
     ci = cell_inputs(arch, shape, mesh, rc, accum=accum, layout=layout,
                      pin_grads=pin_grads, quant_experts=quant_experts)
     for r in drop_rules:
@@ -137,6 +139,9 @@ def main() -> int:
                     help="remove an activation-sharding rule (perf exp)")
     ap.add_argument("--quant-experts", action="store_true",
                     help="int8 weight-only routed experts (serving)")
+    ap.add_argument("--executor", default=None,
+                    help="MoE executor backend override "
+                         "(repro.execution registry; default: xla)")
     ap.add_argument("--out", default=str(RESULT_DIR))
     args = ap.parse_args()
     out = pathlib.Path(args.out)
@@ -178,7 +183,7 @@ def main() -> int:
                    layout=args.layout, pin_grads=args.pin_grads,
                    capacity_factor=args.capacity_factor,
                    variant=args.variant, drop_rules=args.drop_rule,
-                   quant_experts=args.quant_experts)
+                   quant_experts=args.quant_experts, executor=args.executor)
     tag = f"{args.arch}.{args.shape}.{rec['mesh']}"
     if args.variant:
         tag += f".{args.variant}"

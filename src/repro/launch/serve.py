@@ -3,12 +3,15 @@ routed experts (the §Perf cell-3 deployment layout), and run batched
 requests through the slot engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch moonshot-v1-16b-a3b \\
-        --reduce --requests 6 --quant-experts
+        --reduce --requests 6 --quant-experts --executor xla
 """
 import argparse
 
 
 def main():
+    from repro.execution import available_executors
+    from repro.scheduling import available_policies
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduce", action="store_true")
@@ -17,8 +20,11 @@ def main():
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--capacity", type=int, default=128)
     ap.add_argument("--quant-experts", action="store_true")
+    ap.add_argument("--executor", default="xla",
+                    choices=available_executors(),
+                    help="MoE executor backend (repro.execution registry)")
     ap.add_argument("--schedule-policy", default="dynamic",
-                    choices=["fixed", "capacity_factor", "dynamic"],
+                    choices=available_policies(),
                     help="MoE schedule policy (serving default: dynamic)")
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
@@ -51,7 +57,9 @@ def main():
     engine = ServeEngine(cfg, params, slots=args.slots,
                          capacity=args.capacity,
                          rc=RunConfig(q_chunk=64, kv_chunk=64,
-                                      schedule_policy=args.schedule_policy))
+                                      executor=args.executor,
+                                      schedule_policy=args.schedule_policy,
+                                      moe_stats=bool(cfg.is_moe)))
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab_size,
@@ -61,6 +69,12 @@ def main():
     engine.run(reqs)
     for r in reqs:
         print(f"req {r.rid}: {r.prompt.tolist()} -> {r.out}")
+        if r.stats:
+            sched = {k.split("/", 1)[1]: round(v, 3)
+                     for k, v in r.stats.items() if k.startswith("sched/")}
+            if sched:
+                print(f"  plan stats (last step, summed over moe layers): "
+                      f"{sched}")
     assert all(r.done for r in reqs)
 
 

@@ -37,7 +37,7 @@ def dryrun_runconfig(cfg: ModelConfig, shape: ShapeConfig, *,
     return RunConfig(
         compute_dtype=jnp.bfloat16,
         param_dtype=jnp.bfloat16,
-        moe_impl="xla",
+        executor="xla",
         ep=bool(cfg.is_moe and ep),
         remat=(shape.kind == "train"),
         # CP: full-q chunk (each rank computes its sequence shard);

@@ -42,7 +42,7 @@ class RunConfig(NamedTuple):
     """Execution options orthogonal to the architecture."""
     compute_dtype: Any = jnp.float32
     param_dtype: Any = jnp.float32
-    moe_impl: str = "xla"            # pallas | xla | dense
+    executor: str = "xla"            # registered MoE backend (repro.execution)
     ep: bool = False                 # EP all-to-all dispatch over 'model' axis
     ep_axis: str = "model"
     remat: bool = False
@@ -54,6 +54,9 @@ class RunConfig(NamedTuple):
     capacity_factor: float = 2.0     # EP buffer headroom
     schedule_policy: str = "fixed"   # fixed | capacity_factor | dynamic
                                      # (serving engine defaults to dynamic)
+    moe_stats: bool = False          # surface per-plan ScheduleStats in aux
+                                     # (single-device dispatch only: EP plans
+                                     # carry no schedule)
     unroll: bool = False             # python-loop the layer stack (roofline
                                      # validation: cost_analysis counts scan
                                      # bodies once; unrolled counts all)
@@ -178,12 +181,22 @@ def _attn_kw(cfg: ModelConfig, kind: str, rc: RunConfig):
                 q_chunk=rc.q_chunk or 10 ** 9, kv_chunk=rc.kv_chunk or 10 ** 9)
 
 
+def _moe_stats_active(rc: RunConfig) -> bool:
+    """Plan telemetry flows only where a schedule exists: single-device
+    dispatch (EP plans skip schedule construction) on a schedule-consuming
+    executor (the dense oracle has none)."""
+    from repro.execution import get_executor
+    return (rc.moe_stats and not rc.ep
+            and get_executor(rc.executor).needs_schedule)
+
+
 def _apply_moe_ffn(bp, x, cfg: ModelConfig, rc: RunConfig, mode: str):
-    dcfg = dispatch_config(cfg.moe, impl=rc.moe_impl,
+    dcfg = dispatch_config(cfg.moe, executor=rc.executor,
                            fuse_gate_up=rc.fuse_gate_up,
                            fold_combine=rc.fold_combine,
                            schedule_policy=rc.schedule_policy,
-                           capacity_factor=rc.capacity_factor)
+                           capacity_factor=rc.capacity_factor,
+                           emit_stats=_moe_stats_active(rc))
     if rc.ep:
         from repro.core.distributed import apply_moe_ep
         layout = "replicated" if mode == "decode" else "sharded"
@@ -479,6 +492,11 @@ def forward(params, cfg: ModelConfig, rc: RunConfig, batch: dict,
     aux0 = {"lb_loss": jnp.zeros((), jnp.float32),
             "router_z": jnp.zeros((), jnp.float32)} \
         if (cfg.is_moe and "moe" in body) else {}
+    if aux0 and _moe_stats_active(rc):
+        # plan telemetry keys must pre-exist: aux is a fixed scan carry
+        from repro.scheduling import ScheduleStats
+        aux0.update({f"sched/{k}": jnp.zeros((), jnp.float32)
+                     for k in ScheduleStats._fields})
     gi_arr = jnp.arange(n_groups, dtype=jnp.int32)
     if rc.unroll:
         aux_acc2 = aux0

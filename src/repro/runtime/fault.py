@@ -17,20 +17,24 @@ from typing import Callable, Deque, List, Optional
 
 class StragglerMonitor:
     def __init__(self, window: int = 32, factor: float = 2.0,
-                 warmup: int = 3):
+                 warmup: int = 3,
+                 clock: Callable[[], float] = time.perf_counter):
+        """``clock`` is injectable so tests drive the monitor with a
+        deterministic virtual clock instead of wall-time sleeps."""
         self.window: Deque[float] = collections.deque(maxlen=window)
         self.factor = factor
         self.warmup = warmup
+        self.clock = clock
         self.flagged: List[dict] = []
         self._t0: Optional[float] = None
         self._step = 0
 
     def start_step(self, step: int) -> None:
-        self._t0 = time.perf_counter()
+        self._t0 = self.clock()
         self._step = step
 
     def end_step(self) -> Optional[dict]:
-        dt = time.perf_counter() - self._t0
+        dt = self.clock() - self._t0
         verdict = None
         if len(self.window) >= self.warmup:
             med = statistics.median(self.window)

@@ -7,7 +7,8 @@ built-in policies: ``fixed``, ``capacity_factor``, ``dynamic``.
 from repro.scheduling.base import (DEFAULT_POLICY_SWEEP,  # noqa: F401
                                    BlockSchedule, ScheduleStats,
                                    available_policies, build_schedule,
-                                   get_policy, register_policy, round_up,
+                                   get_policy, policy_config_kwargs,
+                                   register_policy, round_up,
                                    schedule_stats)
 from repro.scheduling.capacity import (build_capacity_schedule,  # noqa: F401
                                        capacity_slots, expert_capacity)

@@ -112,13 +112,28 @@ DEFAULT_POLICY_SWEEP = (
 PolicyFn = Callable[..., BlockSchedule]
 
 _POLICIES: Dict[str, PolicyFn] = {}
+_POLICY_CONFIG_FIELDS: Dict[str, tuple] = {}
 
 
-def register_policy(name: str) -> Callable[[PolicyFn], PolicyFn]:
+def register_policy(name: str, *, config_fields: tuple = ()
+                    ) -> Callable[[PolicyFn], PolicyFn]:
+    """Register a schedule policy.  ``config_fields`` names the dispatch-
+    config fields this policy consumes as build kwargs (e.g. the
+    ``capacity_factor`` policy reads ``cfg.capacity_factor``) — consumers
+    call ``policy_config_kwargs`` instead of hard-coding per-policy
+    branches."""
     def deco(fn: PolicyFn) -> PolicyFn:
         _POLICIES[name] = fn
+        _POLICY_CONFIG_FIELDS[name] = tuple(config_fields)
         return fn
     return deco
+
+
+def policy_config_kwargs(policy: str, cfg) -> dict:
+    """The registered policy's build kwargs, read off any config object
+    carrying the fields the policy declared at registration."""
+    get_policy(policy)                       # uniform unknown-policy error
+    return {f: getattr(cfg, f) for f in _POLICY_CONFIG_FIELDS[policy]}
 
 
 def get_policy(name: str) -> PolicyFn:

@@ -51,7 +51,7 @@ def capacity_slots(flat: jnp.ndarray, n_experts: int):
     return slot, counts
 
 
-@register_policy("capacity_factor")
+@register_policy("capacity_factor", config_fields=("capacity_factor",))
 def build_capacity_schedule(indices: jnp.ndarray, n_experts: int,
                             block_m: int, *,
                             capacity_factor: float = 2.0,

@@ -55,7 +55,7 @@ def sub_block(block_m: int, block_m_min: int = 8) -> int:
     return block_m
 
 
-@register_policy("dynamic")
+@register_policy("dynamic", config_fields=("block_m_min",))
 def build_dynamic_schedule(indices: jnp.ndarray, n_experts: int,
                            block_m: int, *,
                            block_m_min: int = 8) -> BlockSchedule:

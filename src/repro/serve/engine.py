@@ -26,6 +26,10 @@ class Request:
     eos: Optional[int] = None
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # dispatch-plan telemetry, set at retirement from the request's final
+    # forward (router aux + sched/* ScheduleStats when the model is MoE
+    # and stats are enabled), summed over the MoE layers of that step
+    stats: dict = dataclasses.field(default_factory=dict)
 
 
 class ServeEngine:
@@ -35,9 +39,10 @@ class ServeEngine:
         self.params = params
         # serving default: the dynamic schedule policy — production traffic
         # is skewed and decode batches are small, exactly the regime where
-        # the fixed tile layout pads worst (DESIGN.md §3)
+        # the fixed tile layout pads worst (DESIGN.md §3) — with per-plan
+        # telemetry on so operators see padding/drop behavior per request
         self.rc = rc or RunConfig(q_chunk=64, kv_chunk=64,
-                                  schedule_policy="dynamic")
+                                  schedule_policy="dynamic", moe_stats=True)
         self.slots = slots
         self.capacity = capacity
         # one single-sequence cache per slot (slot caches stay independent
@@ -45,26 +50,30 @@ class ServeEngine:
         self.caches = [init_cache(cfg, 1, capacity) for _ in range(slots)]
         self.pos = [0] * slots
         self.active: List[Optional[Request]] = [None] * slots
+        # per-active-request raw aux from its latest forward (device
+        # scalars; materialized into Request.stats at retirement)
+        self._last_aux: Dict[int, dict] = {}
 
         self._prefill = jax.jit(
             lambda p, b, c: forward(p, self.cfg, self.rc, b, mode="prefill",
-                                    cache=c)[:2])
+                                    cache=c))
         self._decode = jax.jit(
             lambda p, b, c, pos: forward(p, self.cfg, self.rc, b,
                                          mode="decode", cache=c,
-                                         pos=pos)[:2])
+                                         pos=pos))
 
     # ------------------------------------------------------------------
     def admit(self, req: Request) -> bool:
         for s in range(self.slots):
             if self.active[s] is None:
                 toks = jnp.asarray(req.prompt, jnp.int32)[None]
-                logits, cache = self._prefill(self.params,
-                                              self._batch(toks), self.caches[s])
+                logits, cache, aux = self._prefill(
+                    self.params, self._batch(toks), self.caches[s])
                 self.caches[s] = cache
                 self.pos[s] = len(req.prompt)
                 tok = int(jnp.argmax(logits, -1)[0])
                 req.out.append(tok)
+                self._last_aux[id(req)] = aux
                 self.active[s] = req
                 return True
         return False
@@ -85,16 +94,21 @@ class ServeEngine:
                 continue
             n += 1
             last = jnp.asarray([[req.out[-1]]], jnp.int32)
-            logits, cache = self._decode(self.params, self._batch(last),
-                                         self.caches[s],
-                                         jnp.int32(self.pos[s]))
+            logits, cache, aux = self._decode(self.params, self._batch(last),
+                                              self.caches[s],
+                                              jnp.int32(self.pos[s]))
             self.caches[s] = cache
             self.pos[s] += 1
             tok = int(jnp.argmax(logits, -1)[0])
             req.out.append(tok)
+            # keep the raw device scalars; only the retiring step pays the
+            # host transfer (intermediate steps are overwritten anyway)
+            self._last_aux[id(req)] = aux
             if (req.eos is not None and tok == req.eos) \
                     or len(req.out) >= req.max_new \
                     or self.pos[s] >= self.capacity - 1:
+                req.stats = {k: float(v) for k, v
+                             in self._last_aux.pop(id(req)).items()}
                 req.done = True
                 self.active[s] = None       # retire -> slot reusable
         return n

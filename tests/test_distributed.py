@@ -91,7 +91,7 @@ for pol in ("capacity_factor", "dynamic"):
     y_ref, _ = apply_moe(params, x, dcfg)
     if pol == "capacity_factor":
         assert float(jnp.max(jnp.abs(
-            y_ref - apply_moe(params, x, dcfg._replace(impl="dense"))[0]
+            y_ref - apply_moe(params, x, dcfg._replace(executor="dense"))[0]
         ))) > 1e-6, "cf=0.5 must actually drop tokens"
     with set_mesh(mesh):
         y_r, _ = jax.jit(lambda p, x: apply_moe_ep(

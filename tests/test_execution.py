@@ -1,0 +1,188 @@
+"""Plan/execute API (ISSUE 2): executor-registry parity, plan reuse across
+backends, per-policy config plumbing, and registry error behavior.
+
+* every registered executor x every schedule policy matches the dense
+  oracle BOTH through the back-compat ``moe_ffn`` shim and through the
+  two-phase ``plan_dispatch`` / ``execute`` API;
+* the shim and the two-phase API are bitwise-identical;
+* one ``DispatchPlan`` consumed by two different executors produces
+  matching outputs (the plan is backend-independent);
+* unknown executor names fail with the available registry listed;
+* schedule policies declare the config fields they consume
+  (``policy_config_kwargs`` replaces per-policy kwargs branching).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dispatch import MoEDispatchConfig, moe_ffn, route
+from repro.execution import (DispatchPlan, available_executors, execute,
+                             get_executor, plan_dispatch)
+from repro.kernels import ref
+from repro.scheduling import (available_policies, capacity_slots,
+                              expert_capacity, policy_config_kwargs)
+
+T, K, E, M, D, F = 48, 2, 8, 8, 16, 24
+
+
+def make_layer(seed=2):
+    ks = jax.random.split(jax.random.key(seed), 5)
+    x = jax.random.normal(ks[0], (T, D))
+    wr = jax.random.normal(ks[1], (D, E)) * 0.3
+    w = {"w_gate": jax.random.normal(ks[2], (E, D, F)) * 0.3,
+         "w_up": jax.random.normal(ks[3], (E, D, F)) * 0.3,
+         "w_down": jax.random.normal(ks[4], (E, F, D)) * 0.3}
+    return x, wr, w
+
+
+def dense_oracle(x, wr, w, cfg):
+    """Ground truth on kept tokens: dense ref with capacity-dropped
+    assignments zero-weighted.  Only schedule-consuming backends see the
+    capacity policy's drops — the schedule-free dense executor computes the
+    undropped routing exactly."""
+    weights, indices, _ = route(x, wr, cfg)
+    if cfg.schedule_policy == "capacity_factor" \
+            and get_executor(cfg.executor).needs_schedule:
+        cap = expert_capacity(T, K, E, M, cfg.capacity_factor)
+        slot, _ = capacity_slots(indices.reshape(-1), E)
+        weights = jnp.where((slot < cap).reshape(indices.shape), weights, 0.0)
+    return ref.moe_ffn_dense_ref(x, w["w_gate"], w["w_up"], w["w_down"],
+                                 weights, indices)
+
+
+def test_builtin_executors_registered():
+    assert available_executors() == ["dense", "pallas", "xla"]
+
+
+@pytest.mark.parametrize("policy", sorted(available_policies()))
+@pytest.mark.parametrize("executor", sorted(available_executors()))
+def test_every_executor_every_policy_matches_oracle(executor, policy):
+    x, wr, w = make_layer()
+    cfg = MoEDispatchConfig(n_experts=E, top_k=K, block_m=M,
+                            executor=executor, schedule_policy=policy,
+                            capacity_factor=0.5)   # force real drops
+    oracle = np.asarray(dense_oracle(x, wr, w, cfg))
+
+    # (a) through the back-compat shim
+    y_shim, aux = moe_ffn(x, wr, w["w_gate"], w["w_up"], w["w_down"], cfg)
+    np.testing.assert_allclose(np.asarray(y_shim), oracle,
+                               rtol=5e-4, atol=5e-4)
+    assert set(aux) >= {"lb_loss", "router_z"}
+
+    # (b) through the two-phase API — bitwise-identical to the shim
+    plan = plan_dispatch(x, wr, cfg)
+    y_two = execute(plan, x, w, cfg).astype(x.dtype)
+    np.testing.assert_array_equal(np.asarray(y_two), np.asarray(y_shim))
+
+    # the plan carries a schedule exactly when the backend needs one
+    assert (plan.schedule is not None) == get_executor(executor).needs_schedule
+
+
+@pytest.mark.parametrize("policy", sorted(available_policies()))
+def test_one_plan_two_executors_identical(policy):
+    """A DispatchPlan is backend-independent: the SAME plan consumed by the
+    xla scan and the pallas kernels produces matching outputs."""
+    x, wr, w = make_layer(seed=5)
+    cfg = MoEDispatchConfig(n_experts=E, top_k=K, block_m=M, executor="xla",
+                            schedule_policy=policy)
+    plan = plan_dispatch(x, wr, cfg)
+    y_xla = execute(plan, x, w, cfg, executor="xla")
+    y_pal = execute(plan, x, w, cfg, executor="pallas")
+    np.testing.assert_allclose(np.asarray(y_xla), np.asarray(y_pal),
+                               rtol=2e-4, atol=2e-4)
+    # re-executing the identical plan is deterministic
+    np.testing.assert_array_equal(
+        np.asarray(y_xla), np.asarray(execute(plan, x, w, cfg,
+                                              executor="xla")))
+
+
+def test_plan_contents():
+    x, wr, w = make_layer()
+    cfg = MoEDispatchConfig(n_experts=E, top_k=K, block_m=M, executor="xla",
+                            emit_stats=True)
+    plan = plan_dispatch(x, wr, cfg)
+    assert isinstance(plan, DispatchPlan)
+    assert plan.weights.shape == (T, K) and plan.indices.shape == (T, K)
+    assert plan.logits.shape == (T, E)
+    assert plan.combine_scale.shape == (plan.schedule.capacity,)
+    assert "sched/pad_waste" in plan.aux and "lb_loss" in plan.aux
+    # EP-style plans skip schedule construction
+    lean = plan_dispatch(x, wr, cfg, with_schedule=False)
+    assert lean.schedule is None and lean.combine_scale is None
+    np.testing.assert_array_equal(np.asarray(lean.indices),
+                                  np.asarray(plan.indices))
+
+
+def test_unknown_executor_error_lists_registry():
+    x, wr, w = make_layer()
+    cfg = MoEDispatchConfig(n_experts=E, top_k=K, block_m=M,
+                            executor="triton")
+    with pytest.raises(ValueError, match=r"unknown executor 'triton'"):
+        moe_ffn(x, wr, w["w_gate"], w["w_up"], w["w_down"], cfg)
+    with pytest.raises(ValueError, match=r"dense.*pallas.*xla"):
+        get_executor("cuda")
+
+
+def test_schedule_free_plan_rejected_loudly():
+    """A plan without a schedule (dense-built, or with_schedule=False) must
+    fail with guidance when handed to a schedule-consuming executor."""
+    x, wr, w = make_layer()
+    cfg = MoEDispatchConfig(n_experts=E, top_k=K, block_m=M,
+                            executor="dense")
+    plan = plan_dispatch(x, wr, cfg)            # dense: no schedule
+    with pytest.raises(ValueError, match="with_schedule=True"):
+        execute(plan, x, w, cfg, executor="xla")
+
+
+def test_dense_has_no_phase_contract():
+    """The dense oracle is whole-plan only — the EP paths must reject it
+    loudly instead of silently running another backend."""
+    dense = get_executor("dense")
+    cfg = MoEDispatchConfig(n_experts=E, top_k=K, block_m=M,
+                            executor="dense")
+    with pytest.raises(NotImplementedError, match="dense"):
+        dense.permute(jnp.zeros((8, 4)), None, cfg)
+    with pytest.raises(NotImplementedError, match="dense"):
+        dense.expert_ffn(jnp.zeros((8, 4)), {}, None, cfg)
+
+
+def test_policy_declared_config_fields():
+    cfg = MoEDispatchConfig(n_experts=E, top_k=K, block_m=M,
+                            capacity_factor=1.25, block_m_min=16)
+    assert policy_config_kwargs("fixed", cfg) == {}
+    assert policy_config_kwargs("capacity_factor", cfg) == \
+        {"capacity_factor": 1.25}
+    assert policy_config_kwargs("dynamic", cfg) == {"block_m_min": 16}
+    with pytest.raises(ValueError, match="unknown schedule policy"):
+        policy_config_kwargs("nope", cfg)
+
+
+def test_moe_stats_flow_through_model_scan():
+    """RunConfig.moe_stats surfaces per-plan ScheduleStats through the
+    layer-scan aux carry (what ServeEngine reports per request) — and is
+    inert for the schedule-free dense executor."""
+    from repro.configs import get_config, reduced
+    from repro.models import RunConfig, init_params, loss_fn
+    cfg = reduced(get_config("moonshot-v1-16b-a3b"), layers=3, d_model=32)
+    params = init_params(cfg, jax.random.key(0))
+    batch = {"tokens": jnp.ones((2, 16), jnp.int32)}
+    rc = RunConfig(q_chunk=16, kv_chunk=16, loss_chunk=16, moe_stats=True,
+                   schedule_policy="dynamic")
+    _, metrics = loss_fn(params, cfg, rc, batch)
+    assert "sched/pad_waste" in metrics and "sched/occupancy" in metrics
+    assert float(metrics["sched/useful_rows"]) > 0
+    _, m_dense = loss_fn(params, cfg, rc._replace(executor="dense"), batch)
+    assert not any(k.startswith("sched/") for k in m_dense)
+
+
+def test_deprecated_impl_alias():
+    """Pre-registry call sites keep working: cfg.impl mirrors cfg.executor
+    and dispatch_config accepts impl=."""
+    from repro.configs.base import MoEConfig
+    from repro.core.moe_layer import dispatch_config
+    cfg = MoEDispatchConfig(n_experts=E, top_k=K, block_m=M,
+                            executor="pallas")
+    assert cfg.impl == "pallas"
+    moe = MoEConfig(n_experts=E, top_k=K, d_ff_expert=F, block_m=M)
+    assert dispatch_config(moe, impl="dense").executor == "dense"

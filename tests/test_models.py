@@ -41,14 +41,22 @@ def test_smoke_train_step(arch):
     assert np.all(np.isfinite(np.asarray(h, np.float32)))
     loss, metrics = jax.jit(lambda p, b: loss_fn(p, cfg, RC, b))(params, batch)
     assert np.isfinite(float(loss))
-    # one grad step moves the loss
+    # a grad step moves the loss: the gradient is a descent direction, so
+    # SOME small enough step must improve.  A single fixed step size can
+    # overshoot on stiff architectures (zamba2's 81-layer hybrid stack) —
+    # backtrack instead of asserting one arbitrary lr improves marginally.
     g = jax.jit(jax.grad(lambda p, b: loss_fn(p, cfg, RC, b)[0]))(
         params, batch)
     assert all(np.all(np.isfinite(np.asarray(l, np.float32)))
                for l in jax.tree.leaves(g))
-    p2 = jax.tree.map(lambda p, gg: p - 0.3 * gg, params, g)
-    loss2, _ = jax.jit(lambda p, b: loss_fn(p, cfg, RC, b))(p2, batch)
-    assert float(loss2) < float(loss)
+    loss_at = jax.jit(lambda p, b: loss_fn(p, cfg, RC, b)[0])
+    losses2 = []
+    for eta in (0.3, 0.1, 0.03):
+        p2 = jax.tree.map(lambda p, gg: p - eta * gg, params, g)
+        losses2.append(float(loss_at(p2, batch)))
+        if losses2[-1] < float(loss):
+            break
+    assert min(losses2) < float(loss), (losses2, float(loss))
 
 
 @pytest.mark.parametrize("arch", [a for a in ARCH_NAMES
@@ -81,7 +89,7 @@ def test_moe_impls_agree_in_model(arch):
     batch = make_batch(cfg)
     outs = {}
     for impl in ("dense", "xla", "pallas"):
-        rc = RC._replace(moe_impl=impl)
+        rc = RC._replace(executor=impl)
         h, _, _ = forward(params, cfg, rc, batch, mode="train")
         outs[impl] = np.asarray(h, np.float32)
     np.testing.assert_allclose(outs["dense"], outs["xla"],

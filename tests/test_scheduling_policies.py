@@ -134,7 +134,8 @@ def test_moe_ffn_matches_dense_oracle_on_kept_tokens(policy, kw, impl):
     T, k, E, M, d, f = 48, 2, 8, 8, 16, 24
     cf = 0.5 if policy == "capacity_factor" else None   # force real drops
     cfg = MoEDispatchConfig(
-        n_experts=E, top_k=k, block_m=M, impl=impl, schedule_policy=policy,
+        n_experts=E, top_k=k, block_m=M, executor=impl,
+        schedule_policy=policy,
         capacity_factor=(cf if cf is not None else 2.0), emit_stats=True)
     ks = jax.random.split(jax.random.key(2), 5)
     x = jax.random.normal(ks[0], (T, d))

@@ -95,17 +95,21 @@ def test_checkpoint_atomic_and_gc(tmp_path):
 
 
 def test_straggler_monitor():
-    import time
+    """Deterministic virtual clock — no wall-time sleeps, so the verdict
+    cannot flake under host load."""
     from repro.runtime.fault import StragglerMonitor
-    mon = StragglerMonitor(window=16, factor=2.0, warmup=3)
+    now = [0.0]
+    mon = StragglerMonitor(window=16, factor=2.0, warmup=3,
+                           clock=lambda: now[0])
     for i in range(6):
         mon.start_step(i)
-        time.sleep(0.01)
+        now[0] += 0.01                      # six steady 10ms steps
         assert mon.end_step() is None
     mon.start_step(6)
-    time.sleep(0.08)
+    now[0] += 0.08                          # one 8x step -> must flag
     flag = mon.end_step()
-    assert flag is not None and flag["slowdown"] > 2.0
+    assert flag is not None and flag["slowdown"] == pytest.approx(8.0)
+    assert mon.flagged == [flag]
 
 
 def test_compression_error_feedback_unbiased():
