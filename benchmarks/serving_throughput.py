@@ -1,0 +1,140 @@
+"""Decode throughput of the batched serving engine: active-slot count x
+schedule policy.
+
+The paper's throughput claim is that MoE wins come from batching tokens
+into one fused dispatch; at serve time the decode batch IS the set of
+active slots, so this sweep measures exactly that lever: every step is one
+jitted forward over the (slots, capacity) cache — one DispatchPlan per MoE
+layer covering all slots — and tokens/sec is slots * steps / wall.  More
+active slots amortize both the per-step dispatch overhead and the expert
+weight traffic (the dominant decode cost), so decode throughput should
+rise with slot count; the fixed-vs-dynamic policy axis shows what schedule
+construction costs on realistic decode batches.
+
+Steady-state methodology: all slots are admitted up front (max_new large
+enough that nothing retires inside the timed window), two warmup steps
+absorb compilation, then ``--steps`` lock-step decodes are timed.
+
+Records go to results/serve/<arch><suffix>.json (CSV on stdout follows
+benchmarks/common emit conventions).
+
+    PYTHONPATH=src python -m benchmarks.serving_throughput [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_config, reduced
+from repro.execution import available_executors
+from repro.models import RunConfig, init_params
+from repro.scheduling import available_policies
+from repro.serve.engine import Request, ServeEngine
+
+PROMPT_LEN = 6
+
+
+def run_cell(cfg, params, *, slots: int, policy: str, executor: str,
+             steps: int, capacity: int) -> dict:
+    rc = RunConfig(q_chunk=64, kv_chunk=64, executor=executor,
+                   schedule_policy=policy, moe_stats=False)
+    eng = ServeEngine(cfg, params, slots=slots, capacity=capacity, rc=rc)
+    rng = np.random.default_rng(0)
+    for i in range(slots):
+        eng.admit(Request(rid=i,
+                          prompt=rng.integers(0, cfg.vocab_size,
+                                              PROMPT_LEN).astype(np.int32),
+                          max_new=capacity))        # never retires in-window
+    assert eng.n_active == slots
+    for _ in range(2):                               # warmup: compile + cache
+        eng.step()
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        n = eng.step()
+        assert n == slots
+    dt = time.perf_counter() - t0
+    s_per_step = dt / steps
+    tok_per_s = slots * steps / dt
+    emit(f"serve_{policy}_slots{slots}", s_per_step,
+         f"tok_per_s={tok_per_s:.1f}")
+    return {"slots": slots, "policy": policy, "executor": executor,
+            "steps": steps, "s_per_step": s_per_step,
+            "tok_per_s": tok_per_s}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="moonshot-v1-16b-a3b")
+    ap.add_argument("--slots", default="1,2,4,8",
+                    help="comma-separated active-slot counts to sweep")
+    ap.add_argument("--policies", default="fixed,dynamic",
+                    help=f"comma-separated schedule policies "
+                         f"(registered: {','.join(available_policies())})")
+    ap.add_argument("--executor", default="xla",
+                    choices=available_executors())
+    ap.add_argument("--steps", type=int, default=32)
+    ap.add_argument("--capacity", type=int, default=128)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep for CI: slots 1,2 / 4 steps")
+    ap.add_argument("--out", default="results/serve",
+                    help="output dir for the JSON records")
+    args = ap.parse_args()
+
+    slot_counts = [int(s) for s in args.slots.split(",")]
+    steps = args.steps
+    if args.smoke:
+        slot_counts = [1, 2]
+        steps = 4
+    # steady-state requires no retirement inside warmup(2)+steps decodes:
+    # a slot retires when its position hits capacity - 1
+    max_steps = args.capacity - 1 - PROMPT_LEN - 2
+    if steps > max_steps:
+        raise SystemExit(
+            f"--steps {steps} exceeds the capacity headroom: at most "
+            f"{max_steps} timed steps fit before a slot retires "
+            f"(capacity {args.capacity} - prompt {PROMPT_LEN} - warmup 2); "
+            f"raise --capacity or lower --steps")
+
+    cfg = reduced(get_config(args.arch))
+    params = init_params(cfg, jax.random.key(0))
+    print(f"# {args.arch} (reduced) — decode throughput, "
+          f"slots={slot_counts} x policies={args.policies} "
+          f"[executor={args.executor}]")
+    print("name,us_per_call,derived")
+
+    records = []
+    for policy in args.policies.split(","):
+        for slots in slot_counts:
+            records.append(run_cell(cfg, params, slots=slots, policy=policy,
+                                    executor=args.executor, steps=steps,
+                                    capacity=args.capacity))
+
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    suffix = "_smoke" if args.smoke else ""
+    out_path = out_dir / f"{args.arch}{suffix}.json"
+    out_path.write_text(json.dumps({"arch": args.arch, "reduced": True,
+                                    "records": records}, indent=1))
+    print(f"# wrote {out_path}")
+
+    for policy in args.policies.split(","):
+        by_slots = {r["slots"]: r for r in records if r["policy"] == policy}
+        lo, hi = min(by_slots), max(by_slots)
+        gain = by_slots[hi]["tok_per_s"] / by_slots[lo]["tok_per_s"]
+        print(f"# {policy}: {by_slots[lo]['tok_per_s']:.1f} tok/s @ {lo} "
+              f"slot(s) -> {by_slots[hi]['tok_per_s']:.1f} tok/s @ {hi} "
+              f"slots ({gain:.2f}x)")
+        if not args.smoke:
+            assert gain > 1.0, \
+                (f"{policy}: batched decode throughput did not increase "
+                 f"with slot count ({gain:.2f}x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,3 +1,4 @@
 """Model substrate: the 10 assigned architectures on a shared block library."""
 from repro.models.lm import (RunConfig, forward, group_structure, init_cache,  # noqa: F401
-                             init_params, loss_fn)
+                             init_params, loss_fn, slice_cache_slots,
+                             swap_cache_slots, update_cache_slots)

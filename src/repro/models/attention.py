@@ -217,7 +217,12 @@ def attention_block(p, x: jnp.ndarray, *, n_heads: int, n_kv_heads: int,
                     cache_pos: Optional[jnp.ndarray] = None,
                     q_chunk: int = 512, kv_chunk: int = 512):
     """Full attention sub-block: project -> rope -> (cache update) -> flash
-    -> output projection.  Returns (out, new_cache)."""
+    -> output projection.  Returns (out, new_cache).
+
+    Decode: ``cache_pos`` is a scalar (all rows write/attend at the same
+    position) or a (B,) vector — the batched-serving path, where each cache
+    row carries its own sequence position (``scatter_decode_row`` + per-row
+    ``kv_limit`` mask)."""
     from repro.distributed.ctx import constrain
     source_kv = x if xkv is None else xkv
     q, k, v = project_qkv(p, x, source_kv, n_heads, n_kv_heads, head_dim)
@@ -235,12 +240,8 @@ def attention_block(p, x: jnp.ndarray, *, n_heads: int, n_kv_heads: int,
     if cache is not None:
         # decode: write this step's k/v at cache_pos, attend to <= cache_pos
         idx = cache_pos
-        new_k = jax.lax.dynamic_update_slice_in_dim(
-            cache["k"], k.astype(cache["k"].dtype), idx, axis=1) \
-            if isinstance(idx, int) else _scatter_kv(cache["k"], k, idx)
-        new_v = _scatter_kv(cache["v"], v, idx) if not isinstance(idx, int) \
-            else jax.lax.dynamic_update_slice_in_dim(
-                cache["v"], v.astype(cache["v"].dtype), idx, axis=1)
+        new_k = scatter_decode_row(cache["k"], k, idx)
+        new_v = scatter_decode_row(cache["v"], v, idx)
         new_cache = {"k": new_k, "v": new_v}
         k, v = new_k.astype(q.dtype), new_v.astype(q.dtype)
         kv_limit = idx
@@ -254,13 +255,18 @@ def attention_block(p, x: jnp.ndarray, *, n_heads: int, n_kv_heads: int,
     return jnp.dot(out, p["wo"].astype(x.dtype)), new_cache
 
 
-def _scatter_kv(cache: jnp.ndarray, kv: jnp.ndarray, pos: jnp.ndarray):
-    """Write one step's kv at (possibly per-batch) position. cache:
-    (B, S, H, D); kv: (B, 1, H, D); pos: scalar or (B,)."""
+def scatter_decode_row(cache: jnp.ndarray, val: jnp.ndarray, pos):
+    """Write one decode step's row into a cache along the sequence axis.
+
+    cache: (B, S, ...); val: (B, 1, ...); pos: scalar (shared position) or
+    (B,) per-row positions (batched serving).  Rank-agnostic — the same
+    primitive serves attention K/V (B, S, H, D) and the MLA latent cache
+    (B, S, r).  The vector case is a point scatter, not a dense one-hot
+    blend: per step it writes O(B * row) instead of reading and blending
+    the whole O(B * S * row) cache."""
+    pos = jnp.asarray(pos)
     if pos.ndim == 0:
         return jax.lax.dynamic_update_slice_in_dim(
-            cache, kv.astype(cache.dtype), pos, axis=1)
-    B, S = cache.shape[:2]
-    onehot = jax.nn.one_hot(pos, S, dtype=cache.dtype)        # (B, S)
-    return cache * (1 - onehot[..., None, None]) + \
-        onehot[..., None, None] * kv.astype(cache.dtype)
+            cache, val.astype(cache.dtype), pos, axis=1)
+    B = cache.shape[0]
+    return cache.at[jnp.arange(B), pos].set(val[:, 0].astype(cache.dtype))

@@ -386,6 +386,52 @@ def init_cache(cfg: ModelConfig, batch: int, capacity: int,
 
 
 # ----------------------------------------------------------------------
+# Slot views over a batched serving cache
+#
+# The serve engine holds ONE (slots, capacity) cache for all requests and
+# decodes every active slot in a single forward.  These helpers give the
+# engine row-level access without knowing the cache pytree: the batch axis
+# is 0 for prefix/suffix block caches and 1 for the stacked body (whose
+# leading axis is the layer-group dim).
+# ----------------------------------------------------------------------
+def _map_cache(fn, cache, *rest):
+    """fn(batch_axis, leaf, *other_leaves) over every part of a cache."""
+    out = {}
+    for part in cache:
+        axis = 1 if part == "body" else 0
+        out[part] = jax.tree.map(functools.partial(fn, axis), cache[part],
+                                 *(r[part] for r in rest))
+    return out
+
+
+def slice_cache_slots(cache, start, n: int):
+    """Static-size view of ``n`` consecutive slot rows (``start`` may be a
+    traced scalar)."""
+    return _map_cache(
+        lambda ax, l: jax.lax.dynamic_slice_in_dim(l, start, n, axis=ax),
+        cache)
+
+
+def update_cache_slots(cache, sub, start):
+    """Write an n-slot sub-cache back into the full cache at ``start``."""
+    return _map_cache(
+        lambda ax, l, s: jax.lax.dynamic_update_slice_in_dim(
+            l, s.astype(l.dtype), start, axis=ax),
+        cache, sub)
+
+
+def swap_cache_slots(cache, i, j):
+    """Exchange two slot rows (serve-engine compaction keeps active slots a
+    contiguous prefix; ``i``/``j`` may be traced scalars)."""
+    def sw(ax, l):
+        ri = jax.lax.dynamic_slice_in_dim(l, i, 1, axis=ax)
+        rj = jax.lax.dynamic_slice_in_dim(l, j, 1, axis=ax)
+        l = jax.lax.dynamic_update_slice_in_dim(l, ri, j, axis=ax)
+        return jax.lax.dynamic_update_slice_in_dim(l, rj, i, axis=ax)
+    return _map_cache(sw, cache)
+
+
+# ----------------------------------------------------------------------
 # Full forward
 # ----------------------------------------------------------------------
 def _embed(params, cfg: ModelConfig, batch, dt):
@@ -410,7 +456,9 @@ def forward(params, cfg: ModelConfig, rc: RunConfig, batch: dict,
     """Returns (out, new_cache, aux):
     train  -> out = final hidden states (B, S, d)
     prefill-> out = last-position logits (B, V)
-    decode -> out = logits (B, V)
+    decode -> out = logits (B, V); ``pos`` is a scalar (all rows at the
+              same position) or a (B,) vector (per-row positions — the
+              batched serving path)
     """
     from repro.distributed.ctx import constrain
     prefix, body, n_groups, suffix = group_structure(cfg)
@@ -421,7 +469,12 @@ def forward(params, cfg: ModelConfig, rc: RunConfig, batch: dict,
         x = apply_norm(params["ln0"], x, cfg.norm)
 
     if mode == "decode":
-        positions = jnp.full((1,), pos, jnp.int32)
+        # pos: scalar (shared position, classic single-sequence decode) or
+        # (B,) vector (batched serving: each cache row decodes at its own
+        # position — the attention/MLA cache writes scatter per row and the
+        # kv_limit mask is per row).
+        pos = jnp.asarray(pos, jnp.int32)
+        positions = pos[None] if pos.ndim == 0 else pos[:, None]
         cache_pos = pos
     else:
         positions = jnp.arange(S, dtype=jnp.int32)

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import MLAConfig
-from repro.models.attention import flash_attention
+from repro.models.attention import flash_attention, scatter_decode_row
 from repro.models.blocks import apply_norm, dense_init, init_norm, rope
 
 
@@ -82,11 +82,10 @@ def mla_block(p, x: jnp.ndarray, *, n_heads: int, mla: MLAConfig,
         return jnp.dot(out, p["wo"].astype(x.dtype)), None
 
     # ---- decode: absorbed attention over the compressed cache ----
+    # (scatter_decode_row handles scalar and (B,) per-slot positions)
     idx = cache_pos
-    new_ckv = jax.lax.dynamic_update_slice_in_dim(
-        cache["ckv"], c_kv.astype(cache["ckv"].dtype), idx, axis=1)
-    new_kr = jax.lax.dynamic_update_slice_in_dim(
-        cache["kr"], k_rope.astype(cache["kr"].dtype), idx, axis=1)
+    new_ckv = scatter_decode_row(cache["ckv"], c_kv, idx)
+    new_kr = scatter_decode_row(cache["kr"], k_rope, idx)
     new_cache = {"ckv": new_ckv, "kr": new_kr}
 
     out = mla_absorbed_decode(

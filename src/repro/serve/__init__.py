@@ -1,1 +1,9 @@
-"""repro.serve subpackage."""
+"""repro.serve subpackage: batched continuous-batching serving.
+
+engine.py    — ServeEngine: one decode dispatch per step across all slots
+admission.py — pluggable admission policies (fcfs / sjf)
+step.py      — jitted prefill/decode steps (single-sequence + slot-row)
+"""
+from repro.serve.admission import (available_admission_policies,  # noqa: F401
+                                   get_admission, register_admission)
+from repro.serve.engine import Request, ServeEngine  # noqa: F401

@@ -1,0 +1,51 @@
+"""Admission policies: which pending request gets the next free slot.
+
+Mirrors the schedule-policy registry (repro.scheduling): a policy is a
+function ``(pending: Sequence[Request]) -> int`` returning the index of the
+request to admit, registered under a name the engine/launcher select by
+flag.  Policies see the whole pending queue so they can reorder (e.g.
+shortest-prompt-first reduces head-of-line blocking from long prefills),
+but admission never disturbs running decodes: the engine prefills into a
+free slot row of the batched cache while the other slots' rows are
+untouched.
+
+* ``fcfs``  — first-come-first-served (submission order; the pre-refactor
+              engine's behavior)
+* ``sjf``   — shortest-prompt-first (minimizes time-to-first-token for
+              short requests under prefill contention; FCFS tie-break)
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Sequence
+
+AdmissionPolicy = Callable[[Sequence], int]
+
+_POLICIES: Dict[str, AdmissionPolicy] = {}
+
+
+def register_admission(name: str):
+    def deco(fn: AdmissionPolicy) -> AdmissionPolicy:
+        _POLICIES[name] = fn
+        return fn
+    return deco
+
+
+def get_admission(name: str) -> AdmissionPolicy:
+    if name not in _POLICIES:
+        raise ValueError(f"unknown admission policy {name!r}; "
+                         f"registered: {sorted(_POLICIES)}")
+    return _POLICIES[name]
+
+
+def available_admission_policies():
+    return sorted(_POLICIES)
+
+
+@register_admission("fcfs")
+def fcfs(pending: Sequence) -> int:
+    return 0
+
+
+@register_admission("sjf")
+def shortest_prompt_first(pending: Sequence) -> int:
+    return min(range(len(pending)), key=lambda i: (len(pending[i].prompt), i))

@@ -1,10 +1,28 @@
-"""Batched serving engine: slot-based continuous batching (lite).
+"""Batched continuous-batching engine: one decode dispatch per step.
 
-Fixed decode slots over a shared KV cache; requests are admitted into free
-slots, prefilled one request at a time (prefill writes its slot's cache
-rows), then all active slots decode in lock-step with per-slot positions
-and EOS/max-token retirement.  This is the real control-flow skeleton of a
-production server (vLLM-style), scaled to this container."""
+All active slots decode in ONE jitted forward over a single
+``(slots, capacity)`` KV cache — this is where the paper's throughput
+story meets serving: every MoE layer sees the whole decode batch and
+builds exactly one ``DispatchPlan`` per step covering all active tokens,
+so the schedule policies (repro.scheduling) finally have a real batch to
+schedule at serve time.  Control flow (vLLM-style, scaled to this
+container):
+
+* **Slots are a contiguous prefix.**  Active requests occupy cache rows
+  [0, n_active); retirement swaps the freed row with the last active one
+  (a device-side row swap), so the decode step is a fixed-shape forward
+  over the prefix — no masking, no garbage tokens in the dispatch plan.
+* **One sync per step.**  Argmax and EOS detection run on device
+  (serve/step.py); the engine performs a single host transfer per decode
+  step for all slots, instead of one per slot.
+* **Admission never disturbs decodes.**  Prefill writes only its slot's
+  cache row; which pending request is admitted is a pluggable policy
+  (serve/admission.py: fcfs / sjf).
+* **Telemetry.**  The step's shared plan aux (router losses + sched/*
+  ScheduleStats summed over MoE layers) is kept per request rid and
+  materialized into ``Request.stats`` at retirement, tagged with the
+  decode-batch size the request last shared.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -15,7 +33,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models.lm import RunConfig, forward, init_cache
+from repro.models.lm import RunConfig, init_cache, swap_cache_slots
+from repro.serve.admission import get_admission
+from repro.serve.step import make_slot_decode_step, make_slot_prefill_step
 
 
 @dataclasses.dataclass
@@ -27,14 +47,17 @@ class Request:
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     # dispatch-plan telemetry, set at retirement from the request's final
-    # forward (router aux + sched/* ScheduleStats when the model is MoE
-    # and stats are enabled), summed over the MoE layers of that step
+    # step (router aux + sched/* ScheduleStats when the model is MoE and
+    # stats are enabled), summed over the MoE layers of that step; the
+    # plan is shared by every slot decoding in that step, and
+    # ``serve/decode_batch`` records how many
     stats: dict = dataclasses.field(default_factory=dict)
 
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
-                 capacity: int = 256, rc: Optional[RunConfig] = None):
+                 capacity: int = 256, rc: Optional[RunConfig] = None,
+                 admission: str = "fcfs"):
         self.cfg = cfg
         self.params = params
         # serving default: the dynamic schedule policy — production traffic
@@ -45,39 +68,26 @@ class ServeEngine:
                                   schedule_policy="dynamic", moe_stats=True)
         self.slots = slots
         self.capacity = capacity
-        # one single-sequence cache per slot (slot caches stay independent
-        # so admission never disturbs running decodes)
-        self.caches = [init_cache(cfg, 1, capacity) for _ in range(slots)]
-        self.pos = [0] * slots
+        # ONE batched cache; slot s owns row s (batch axis of every leaf)
+        self.cache = init_cache(cfg, slots, capacity)
+        self.pos = np.zeros(slots, np.int64)          # per-slot positions
+        # active requests occupy slots [0, n_active) — prefix invariant
         self.active: List[Optional[Request]] = [None] * slots
-        # per-active-request raw aux from its latest forward (device
-        # scalars; materialized into Request.stats at retirement)
+        self.n_active = 0
+        # per-active-request shared step aux (device scalars; materialized
+        # into Request.stats at retirement), keyed by rid — id(req) of a
+        # retired request can be recycled by the allocator
         self._last_aux: Dict[int, dict] = {}
+        # requests still in flight/pending when run()'s step budget ran out
+        self.dropped: List[Request] = []
+        self._admission = get_admission(admission)
 
-        self._prefill = jax.jit(
-            lambda p, b, c: forward(p, self.cfg, self.rc, b, mode="prefill",
-                                    cache=c))
-        self._decode = jax.jit(
-            lambda p, b, c, pos: forward(p, self.cfg, self.rc, b,
-                                         mode="decode", cache=c,
-                                         pos=pos))
+        self._prefill = make_slot_prefill_step(cfg, self.rc)
+        # one compiled decode step per distinct active-slot count (<= slots)
+        self._decode_steps: Dict[int, object] = {}
+        self._swap = jax.jit(swap_cache_slots)
 
     # ------------------------------------------------------------------
-    def admit(self, req: Request) -> bool:
-        for s in range(self.slots):
-            if self.active[s] is None:
-                toks = jnp.asarray(req.prompt, jnp.int32)[None]
-                logits, cache, aux = self._prefill(
-                    self.params, self._batch(toks), self.caches[s])
-                self.caches[s] = cache
-                self.pos[s] = len(req.prompt)
-                tok = int(jnp.argmax(logits, -1)[0])
-                req.out.append(tok)
-                self._last_aux[id(req)] = aux
-                self.active[s] = req
-                return True
-        return False
-
     def _batch(self, toks):
         b = {"tokens": toks}
         if self.cfg.cross_attn_every:
@@ -86,40 +96,89 @@ class ServeEngine:
                 jnp.float32)
         return b
 
+    def admit(self, req: Request) -> bool:
+        """Prefill ``req`` into the first free slot row; False if full."""
+        if self.n_active >= self.slots:
+            return False
+        if any(r is not None and r.rid == req.rid for r in self.active):
+            # telemetry is keyed by rid; two live requests sharing one
+            # would silently cross their stats and crash at retirement
+            raise ValueError(f"rid {req.rid} is already active")
+        s = self.n_active
+        toks = jnp.asarray(req.prompt, jnp.int32)[None]
+        tok, self.cache, aux = self._prefill(
+            self.params, self.cache, self._batch(toks), jnp.int32(s))
+        self.pos[s] = len(req.prompt)
+        req.out.append(int(tok[0]))
+        self._last_aux[req.rid] = aux
+        self.active[s] = req
+        self.n_active += 1
+        return True
+
     def step(self) -> int:
-        """One decode step across all active slots; returns #active."""
-        n = 0
-        for s, req in enumerate(self.active):
-            if req is None:
-                continue
-            n += 1
-            last = jnp.asarray([[req.out[-1]]], jnp.int32)
-            logits, cache, aux = self._decode(self.params, self._batch(last),
-                                              self.caches[s],
-                                              jnp.int32(self.pos[s]))
-            self.caches[s] = cache
+        """One decode step across ALL active slots: one jit call, one host
+        sync.  Returns the number of slots that decoded."""
+        n = self.n_active
+        if n == 0:
+            return 0
+        reqs = self.active[:n]
+        last = jnp.asarray([[r.out[-1]] for r in reqs], jnp.int32)   # (n, 1)
+        pos = jnp.asarray(self.pos[:n], jnp.int32)                   # (n,)
+        eos = jnp.asarray([-1 if r.eos is None else r.eos for r in reqs],
+                          jnp.int32)
+        fn = self._decode_steps.get(n)
+        if fn is None:
+            fn = self._decode_steps[n] = make_slot_decode_step(
+                self.cfg, self.rc, n)
+        tok, eos_hit, self.cache, aux = fn(
+            self.params, self.cache, self._batch(last), pos, eos)
+        tok_np, eos_np = jax.device_get((tok, eos_hit))  # the ONE host sync
+        for s, r in enumerate(reqs):
+            r.out.append(int(tok_np[s]))
             self.pos[s] += 1
-            tok = int(jnp.argmax(logits, -1)[0])
-            req.out.append(tok)
-            # keep the raw device scalars; only the retiring step pays the
-            # host transfer (intermediate steps are overwritten anyway)
-            self._last_aux[id(req)] = aux
-            if (req.eos is not None and tok == req.eos) \
-                    or len(req.out) >= req.max_new \
+            self._last_aux[r.rid] = aux
+        # retire top-down so the swap-with-last compaction never moves a
+        # slot we still have to examine
+        for s in range(n - 1, -1, -1):
+            r = self.active[s]
+            if bool(eos_np[s]) or len(r.out) >= r.max_new \
                     or self.pos[s] >= self.capacity - 1:
-                req.stats = {k: float(v) for k, v
-                             in self._last_aux.pop(id(req)).items()}
-                req.done = True
-                self.active[s] = None       # retire -> slot reusable
+                self._retire(s, decode_batch=n)
         return n
 
+    def _retire(self, s: int, *, decode_batch: int) -> None:
+        """Free slot ``s``: materialize telemetry, swap the freed cache row
+        with the last active one to keep the active prefix contiguous."""
+        req = self.active[s]
+        req.stats = {k: float(v)
+                     for k, v in self._last_aux.pop(req.rid).items()}
+        req.stats["serve/decode_batch"] = float(decode_batch)
+        req.done = True
+        last = self.n_active - 1
+        if s != last:
+            self.cache = self._swap(self.cache, jnp.int32(s),
+                                    jnp.int32(last))
+            self.active[s] = self.active[last]
+            self.pos[s] = self.pos[last]
+        self.active[last] = None
+        self.pos[last] = 0
+        self.n_active -= 1
+
     def run(self, requests: List[Request], max_steps: int = 512):
-        """Drive admission + decode until done (or the step budget runs out);
-        returns the completed requests in submission order."""
-        pending = list(requests)
+        """Drive admission + decode until done (or the step budget runs
+        out).  Returns the completed requests in submission order; requests
+        still in flight or never admitted keep ``done=False`` (with any
+        partial ``out``) and are collected in ``self.dropped``.  A later
+        ``run`` may resume them: requests already occupying a slot (or
+        already done) are excluded from admission so they are never
+        re-prefilled, but active slots keep decoding."""
+        live = {id(r) for r in self.active if r is not None}
+        pending = [r for r in requests if not r.done and id(r) not in live]
+        self.dropped = []
         for _ in range(max_steps):
-            while pending and self.admit(pending[0]):
-                pending.pop(0)
+            while pending and self.n_active < self.slots:
+                self.admit(pending.pop(self._admission(pending)))
             if self.step() == 0 and not pending:
                 break
+        self.dropped = [r for r in requests if not r.done]
         return [r for r in requests if r.done]

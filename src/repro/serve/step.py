@@ -1,14 +1,26 @@
 """Jitted serving steps: prefill (build caches) and decode (one token).
 
-These are the entry points the decode_*/long_* dry-run cells lower; the
-serve loop in serve/engine.py drives them for real batched requests."""
+Two families live here:
+
+* ``make_prefill_step`` / ``make_decode_step`` — single-sequence steps over
+  a standalone cache (the decode_*/long_* dry-run cells lower these).
+* ``make_slot_prefill_step`` / ``make_slot_decode_step`` — slot-row steps
+  over ONE batched ``(slots, capacity)`` cache (serve/engine.py).  Prefill
+  writes a single slot's row; decode advances the active-slot *prefix*
+  [0, n) in one forward with per-slot positions, argmax + EOS detection
+  on device (the engine syncs once per step for all slots).  ``n`` is a
+  Python int baked into the jitted step: each distinct active-slot count
+  compiles once (bounded by the slot count), exactly like bucketed batch
+  sizes in production engines.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models.lm import RunConfig, forward
+from repro.models.lm import (RunConfig, forward, slice_cache_slots,
+                             update_cache_slots)
 
 
 def make_prefill_step(cfg: ModelConfig, rc: RunConfig):
@@ -34,3 +46,50 @@ def make_forward_only(cfg: ModelConfig, rc: RunConfig):
         h, _, _ = forward(params, cfg, rc, batch, mode="train")
         return h
     return encode_step
+
+
+# ----------------------------------------------------------------------
+# Slot steps over the batched serving cache
+# ----------------------------------------------------------------------
+def make_slot_prefill_step(cfg: ModelConfig, rc: RunConfig):
+    """Prefill one request into slot row ``slot`` of the batched cache.
+
+    Returns jitted ``(params, cache, batch, slot) -> (tok, cache', aux)``:
+    the prompt's KV rows land in ``cache[slot], rows [0, P)``; the first
+    greedy token is argmaxed on device.  The other slots' rows are passed
+    through untouched, so admission never disturbs running decodes.
+
+    The slot row is zeroed before the prefill (every cache leaf inits to
+    zeros) — positional KV rows beyond the prompt are masked by kv_limit
+    anyway, but recurrent state (rwkv shift/state, ssm conv/state) has no
+    position masking and would otherwise leak from the row's retired
+    previous occupant into the new request."""
+    def prefill_step(params, cache, batch, slot):
+        sub = jax.tree.map(jnp.zeros_like, slice_cache_slots(cache, slot, 1))
+        logits, new_sub, aux = forward(params, cfg, rc, batch,
+                                       mode="prefill", cache=sub)
+        cache = update_cache_slots(cache, new_sub, slot)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)      # (1,)
+        return tok, cache, aux
+    # donation (in-place cache update) is a TPU win but warns on CPU where
+    # XLA can't alias the buffers; leave the flag off in this container
+    return jax.jit(prefill_step)
+
+
+def make_slot_decode_step(cfg: ModelConfig, rc: RunConfig, n: int):
+    """One decode step for the ``n`` active slots (prefix rows [0, n)).
+
+    Returns jitted ``(params, cache, batch, pos, eos) -> (tok, eos_hit,
+    cache', aux)`` where ``pos``/``eos`` are (n,) per-slot vectors (``eos``
+    -1 = no EOS token).  One forward covers all active slots — every MoE
+    layer plans/dispatches the n decode tokens together — and both the
+    argmax and the EOS comparison stay on device: the engine performs a
+    single host transfer per step."""
+    def decode_step(params, cache, batch, pos, eos):
+        sub = slice_cache_slots(cache, 0, n)
+        logits, new_sub, aux = forward(params, cfg, rc, batch,
+                                       mode="decode", cache=sub, pos=pos)
+        cache = update_cache_slots(cache, new_sub, 0)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)      # (n,)
+        return tok, tok == eos, cache, aux
+    return jax.jit(decode_step)

@@ -98,3 +98,30 @@ def test_fully_masked_rows_are_zero_not_nan():
                           q_chunk=4, kv_chunk=4)
     assert np.all(np.isfinite(np.asarray(out)))
     np.testing.assert_allclose(np.asarray(out), 0.0, atol=1e-6)
+
+
+def test_attention_block_vector_cache_pos_matches_scalar():
+    """Batched decode with per-row cache positions (the serving path) must
+    equal per-row scalar-pos decodes: same scatter write, same kv_limit."""
+    from repro.models.attention import attention_block, init_attn
+    B, cap, H, D, d = 3, 16, 2, 8, 16
+    p = init_attn(jax.random.key(0), d, H, H, D, False)
+    x = jax.random.normal(jax.random.key(1), (B, 1, d))
+    cache = {"k": jax.random.normal(jax.random.key(2), (B, cap, H, D)),
+             "v": jax.random.normal(jax.random.key(3), (B, cap, H, D))}
+    pos = jnp.array([2, 0, 9], jnp.int32)
+    kw = dict(n_heads=H, n_kv_heads=H, head_dim=D, causal=True,
+              use_rope=True, rope_theta=1e4, q_chunk=10 ** 9,
+              kv_chunk=10 ** 9)
+    out_b, nc_b = attention_block(p, x, **kw, positions=pos[:, None],
+                                  cache=cache, cache_pos=pos)
+    for i in range(B):
+        ci = {"k": cache["k"][i:i + 1], "v": cache["v"][i:i + 1]}
+        out_i, nc_i = attention_block(
+            p, x[i:i + 1], **kw, positions=jnp.full((1,), pos[i], jnp.int32),
+            cache=ci, cache_pos=pos[i])
+        np.testing.assert_allclose(np.asarray(out_b[i]), np.asarray(out_i[0]),
+                                   rtol=2e-5, atol=2e-5)
+        for key in ("k", "v"):
+            np.testing.assert_array_equal(np.asarray(nc_b[key][i]),
+                                          np.asarray(nc_i[key][0]))

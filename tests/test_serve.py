@@ -63,3 +63,304 @@ def test_engine_decode_isolated_between_slots():
               Request(rid=2, prompt=p2, max_new=4))
     ServeEngine(cfg, params, slots=2, capacity=32, rc=RC).run([r1, r2])
     assert [r1.out, r2.out] == solo
+
+
+# ---------------------------------------------------------------------------
+# Batched continuous-batching engine (one decode dispatch per step)
+# ---------------------------------------------------------------------------
+import pytest
+
+from repro.configs import REGISTRY  # noqa: F401  (arch names below)
+from repro.models.lm import slice_cache_slots, update_cache_slots
+
+
+def make_per_slot_reference(cfg, rc, params, capacity):
+    """The PRE-REFACTOR engine's per-slot loop: an isolated B=1 cache per
+    request, one jitted batch-1 decode (scalar pos) and one host sync per
+    slot per step.  Since slots were fully isolated, a request's tokens
+    equal its solo greedy decode with the old retirement rule."""
+    prefill = jax.jit(lambda p, b, c: forward(p, cfg, rc, b, mode="prefill",
+                                              cache=c))
+    decode = jax.jit(lambda p, b, c, pos: forward(p, cfg, rc, b,
+                                                  mode="decode", cache=c,
+                                                  pos=pos))
+
+    def greedy(req):
+        cache = init_cache(cfg, 1, capacity)
+        toks = jnp.asarray(req.prompt, jnp.int32)[None]
+        logits, cache, _ = prefill(params, {"tokens": toks}, cache)
+        out = [int(jnp.argmax(logits, -1)[0])]
+        pos = len(req.prompt)
+        while True:
+            last = jnp.asarray([[out[-1]]], jnp.int32)
+            logits, cache, _ = decode(params, {"tokens": last}, cache,
+                                      jnp.int32(pos))
+            out.append(int(jnp.argmax(logits, -1)[0]))
+            pos += 1
+            if (req.eos is not None and out[-1] == req.eos) \
+                    or len(out) >= req.max_new or pos >= capacity - 1:
+                return out
+    return greedy
+
+
+def moe_cfg(layers=2):
+    return reduced(get_config("moonshot-v1-16b-a3b"), layers=layers,
+                   d_model=64, vocab=256)
+
+
+def test_batched_decode_matches_per_slot_engine_moe():
+    """Greedy outputs of the batched engine (one dispatch per step across
+    all slots) are identical to the pre-refactor per-slot loop."""
+    cfg = moe_cfg()
+    params = init_params(cfg, jax.random.key(0))
+    rc = RunConfig(q_chunk=16, kv_chunk=16, schedule_policy="dynamic",
+                   moe_stats=True)
+    rng = np.random.default_rng(1)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        rng.integers(3, 7)).astype(np.int32),
+                    max_new=5)
+            for i in range(5)]
+    eng = ServeEngine(cfg, params, slots=3, capacity=32, rc=rc)
+    done = eng.run(reqs)
+    assert len(done) == 5 and not eng.dropped
+    ref = make_per_slot_reference(cfg, rc, params, 32)
+    for r in reqs:
+        assert r.out == ref(Request(rid=r.rid, prompt=r.prompt,
+                                    max_new=r.max_new)), r.rid
+
+
+def test_slot_permutation_invariance():
+    """Submission order / slot count change which cache row and decode
+    batch a request lands in — never its tokens."""
+    cfg = reduced(get_config("smollm-360m"), layers=2, d_model=32)
+    params = init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            rng.integers(2, 6)).astype(np.int32)
+               for _ in range(4)]
+
+    def run_order(order, slots):
+        reqs = {i: Request(rid=i, prompt=prompts[i], max_new=4)
+                for i in range(4)}
+        eng = ServeEngine(cfg, params, slots=slots, capacity=32, rc=RC)
+        eng.run([reqs[i] for i in order])
+        assert all(r.done for r in reqs.values())
+        return {i: r.out for i, r in reqs.items()}
+
+    base = run_order([0, 1, 2, 3], 2)
+    assert run_order([3, 1, 0, 2], 2) == base
+    assert run_order([2, 0, 3, 1], 4) == base
+    assert run_order([1, 3, 2, 0], 1) == base
+
+
+def test_eos_retire_readmit_churn_telemetry_intact():
+    """EOS-triggered retirement (detected on device), slot refill under
+    more requests than slots, and per-request plan telemetry keyed by rid
+    surviving the churn."""
+    cfg = moe_cfg()
+    params = init_params(cfg, jax.random.key(0))
+    rc = RunConfig(q_chunk=16, kv_chunk=16, schedule_policy="dynamic",
+                   moe_stats=True)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            rng.integers(3, 7)).astype(np.int32)
+               for _ in range(6)]
+    ref = make_per_slot_reference(cfg, rc, params, 32)
+    solo = [ref(Request(rid=i, prompt=p, max_new=6))
+            for i, p in enumerate(prompts)]
+    # request 0 retires early on EOS: its reference 2nd token as eos
+    reqs = [Request(rid=0, prompt=prompts[0], max_new=6, eos=solo[0][1])]
+    reqs += [Request(rid=i, prompt=prompts[i], max_new=3 + (i % 3))
+             for i in range(1, 6)]
+    eng = ServeEngine(cfg, params, slots=2, capacity=32, rc=rc)
+    done = eng.run(reqs)
+    assert len(done) == 6 and all(r.done for r in reqs)
+    assert reqs[0].out == solo[0][:2]            # on-device EOS cut
+    for r in reqs[1:]:
+        assert r.out == solo[r.rid][:r.max_new]
+    # telemetry: every retired request carries the shared step plan's aux
+    for r in reqs:
+        assert r.stats and r.stats["serve/decode_batch"] >= 1.0
+        assert any(k.startswith("sched/") for k in r.stats)
+        assert all(np.isfinite(v) for v in r.stats.values())
+    assert eng._last_aux == {}                    # all popped by rid
+
+
+def test_one_plan_per_step_covers_exactly_active_slots(monkeypatch):
+    """One decode step = one jit call; each MoE layer builds exactly ONE
+    DispatchPlan whose token count equals the number of active slots.
+    (rc.unroll python-loops the layer stack so the traced plan_dispatch
+    calls are per-layer, not once per scanned group body.)"""
+    import repro.core.dispatch as dispatch_mod
+    cfg = moe_cfg(layers=3)                       # 1 dense prefix + 2 moe
+    params = init_params(cfg, jax.random.key(0))
+    rc = RunConfig(q_chunk=16, kv_chunk=16, schedule_policy="dynamic",
+                   unroll=True)
+    calls = []
+    real = dispatch_mod.plan_dispatch
+
+    def counting(x, w_router, dcfg, **kw):
+        calls.append(int(x.shape[0]))
+        return real(x, w_router, dcfg, **kw)
+
+    monkeypatch.setattr(dispatch_mod, "plan_dispatch", counting)
+    eng = ServeEngine(cfg, params, slots=4, capacity=32, rc=rc)
+    for i in range(3):
+        eng.admit(Request(rid=i, prompt=np.asarray([1 + i, 2, 3], np.int32),
+                          max_new=8))
+    calls.clear()                                 # drop prefill traces
+    assert eng.step() == 3                        # traces the n=3 step
+    n_moe_layers = cfg.n_layers - cfg.moe.first_dense_layers
+    assert len(calls) == n_moe_layers, calls      # one plan per MoE layer
+    assert all(t == 3 for t in calls), calls      # covering active tokens
+    calls.clear()
+    assert eng.step() == 3                        # compiled: no re-trace,
+    assert calls == []                            # still one jit call
+
+
+def test_run_surfaces_dropped_requests():
+    """Requests still in flight when max_steps runs out keep done=False
+    with their partial output and are collected in engine.dropped."""
+    cfg = reduced(get_config("smollm-360m"), layers=1, d_model=32)
+    params = init_params(cfg, jax.random.key(0))
+    reqs = [Request(rid=i, prompt=np.asarray([i + 1, i + 2], np.int32),
+                    max_new=6) for i in range(3)]
+    eng = ServeEngine(cfg, params, slots=1, capacity=16, rc=RC)
+    done = eng.run(reqs, max_steps=3)
+    assert len(done) < 3
+    assert eng.dropped and all(not r.done for r in eng.dropped)
+    assert {r.rid for r in done} | {r.rid for r in eng.dropped} == {0, 1, 2}
+    in_flight = [r for r in eng.dropped if r.out]
+    assert in_flight                              # partial output retained
+    assert all(len(r.out) < r.max_new for r in in_flight)
+    # a later run with budget finishes the stragglers and clears dropped
+    done2 = eng.run([r for r in reqs if not r.done], max_steps=64)
+    assert not eng.dropped and all(r.done for r in reqs) and done2
+
+
+def test_telemetry_keyed_by_rid():
+    """Per-request aux is keyed by rid (id() of a retired request can be
+    recycled after GC) and is cleaned up at retirement."""
+    import gc
+    cfg = moe_cfg()
+    params = init_params(cfg, jax.random.key(0))
+    eng = ServeEngine(cfg, params, slots=2, capacity=32)
+    req = Request(rid=7, prompt=np.asarray([1, 2, 3], np.int32), max_new=3)
+    assert eng.admit(req)
+    assert set(eng._last_aux) == {7}
+    eng.run([], max_steps=8)                      # drain the admitted slot
+    assert req.done and eng._last_aux == {}
+    del req
+    gc.collect()
+    batch2 = [Request(rid=i, prompt=np.asarray([4, 5], np.int32), max_new=3)
+              for i in range(2)]
+    eng.run(batch2)
+    assert all(r.done and r.stats for r in batch2)
+    assert eng._last_aux == {}
+
+
+def test_admission_policies():
+    from repro.serve.admission import (available_admission_policies,
+                                       get_admission)
+    reqs = [Request(rid=0, prompt=np.zeros(5, np.int32)),
+            Request(rid=1, prompt=np.zeros(2, np.int32)),
+            Request(rid=2, prompt=np.zeros(2, np.int32))]
+    assert get_admission("fcfs")(reqs) == 0
+    assert get_admission("sjf")(reqs) == 1        # shortest; fcfs tie-break
+    assert {"fcfs", "sjf"} <= set(available_admission_policies())
+    with pytest.raises(ValueError, match="unknown admission policy"):
+        get_admission("nope")
+
+
+def test_sjf_admission_end_to_end():
+    cfg = reduced(get_config("smollm-360m"), layers=1, d_model=32)
+    params = init_params(cfg, jax.random.key(0))
+    reqs = [Request(rid=i, prompt=np.arange(1, 2 + i, dtype=np.int32),
+                    max_new=3) for i in range(4)]
+    eng = ServeEngine(cfg, params, slots=2, capacity=16, rc=RC,
+                      admission="sjf")
+    done = eng.run(list(reversed(reqs)), max_steps=64)
+    assert len(done) == 4 and all(r.done for r in reqs)
+
+
+@pytest.mark.parametrize("arch", ["smollm-360m", "deepseek-v2-236b"])
+def test_vector_pos_decode_matches_scalar(arch):
+    """forward(mode=decode) with a (B,) position vector over a batched
+    cache equals per-row scalar-pos decodes — including the MLA latent
+    cache scatter (deepseek)."""
+    cfg = reduced(get_config(arch), layers=2, d_model=32)
+    params = init_params(cfg, jax.random.key(0))
+    full = init_cache(cfg, 2, 16)
+    prompts = [np.asarray([1, 5, 9], np.int32),
+               np.asarray([2, 7, 1, 8, 3], np.int32)]
+    toks, poss = [], []
+    for i, p in enumerate(prompts):
+        sub = slice_cache_slots(full, i, 1)
+        logits, new_sub, _ = forward(params, cfg, RC,
+                                     {"tokens": jnp.asarray(p)[None]},
+                                     mode="prefill", cache=sub)
+        full = update_cache_slots(full, new_sub, i)
+        toks.append(int(jnp.argmax(logits, -1)[0]))
+        poss.append(len(p))
+    last = jnp.asarray([[t] for t in toks], jnp.int32)
+    logits_b, full_b, _ = forward(params, cfg, RC, {"tokens": last},
+                                  mode="decode", cache=full,
+                                  pos=jnp.asarray(poss, jnp.int32))
+    for i in range(2):
+        sub = slice_cache_slots(full, i, 1)
+        logits_i, sub_n, _ = forward(params, cfg, RC,
+                                     {"tokens": last[i:i + 1]},
+                                     mode="decode", cache=sub,
+                                     pos=jnp.int32(poss[i]))
+        np.testing.assert_allclose(np.asarray(logits_b[i]),
+                                   np.asarray(logits_i[0]),
+                                   rtol=2e-5, atol=2e-5)
+        sub_b = slice_cache_slots(full_b, i, 1)
+        jax.tree.map(lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=2e-5, atol=2e-5),
+            sub_b, sub_n)
+
+
+def test_resumed_run_does_not_readmit_active_requests():
+    """A second run() finishing stragglers must not re-prefill a request
+    that is still occupying a slot (that would duplicate its output)."""
+    cfg = reduced(get_config("smollm-360m"), layers=1, d_model=32)
+    params = init_params(cfg, jax.random.key(0))
+    reqs = [Request(rid=i, prompt=np.asarray([i + 1, i + 2], np.int32),
+                    max_new=6) for i in range(3)]
+    eng = ServeEngine(cfg, params, slots=1, capacity=16, rc=RC)
+    eng.run(reqs, max_steps=3)                    # r0 left in flight
+    assert eng.dropped
+    eng.run([r for r in reqs if not r.done], max_steps=64)
+    ref = make_per_slot_reference(cfg, RC, params, 16)
+    for r in reqs:
+        assert r.done and len(r.out) == r.max_new
+        assert r.out == ref(Request(rid=r.rid, prompt=r.prompt,
+                                    max_new=r.max_new)), r.rid
+
+
+def test_slot_reuse_resets_recurrent_state():
+    """Reusing a slot row must not leak the retired occupant's recurrent
+    state (rwkv shift/state have no positional masking, unlike KV rows)."""
+    cfg = reduced(get_config("rwkv6-1.6b"), layers=2, d_model=32)
+    params = init_params(cfg, jax.random.key(0))
+    prompts = [np.asarray([3, 1, 4], np.int32),
+               np.asarray([2, 7, 1, 8], np.int32)]
+    ref = make_per_slot_reference(cfg, RC, params, 16)
+    solo = [ref(Request(rid=i, prompt=p, max_new=4))
+            for i, p in enumerate(prompts)]
+    reqs = [Request(rid=i, prompt=p, max_new=4)
+            for i, p in enumerate(prompts)]
+    eng = ServeEngine(cfg, params, slots=1, capacity=16, rc=RC)
+    eng.run(reqs)                                 # slot 0 serves both
+    assert [r.out for r in reqs] == solo
+
+
+def test_duplicate_active_rid_rejected():
+    cfg = reduced(get_config("smollm-360m"), layers=1, d_model=32)
+    params = init_params(cfg, jax.random.key(0))
+    eng = ServeEngine(cfg, params, slots=2, capacity=16, rc=RC)
+    assert eng.admit(Request(rid=5, prompt=np.asarray([1, 2], np.int32)))
+    with pytest.raises(ValueError, match="rid 5 is already active"):
+        eng.admit(Request(rid=5, prompt=np.asarray([3, 4], np.int32)))
