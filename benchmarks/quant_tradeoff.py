@@ -1,0 +1,194 @@
+"""Quantization trade-off sweep: scheme x executor -> decode tokens/sec,
+gathered expert-weight bytes, and layer relative error (DESIGN.md §8).
+
+MoE decode is gather-bound on expert weights, so a scheme's value is the
+three-way trade this sweep records per (scheme, executor) cell:
+
+* **gathered_bytes** — the per-layer expert-weight payload a decode step's
+  weight gather actually moves (QuantTensor ``q``+``s`` leaf bytes; the
+  dense baseline's full mats for ``none``).  int8 halves the fp32 layout's
+  traffic twice over; int4 packs two nibbles per byte on top.
+* **rel_error** — layer-output inf-norm relative error of the quantized
+  dispatch vs the fp32 dense oracle on unquantized weights, checked
+  against the scheme's *declared* ``rel_error_bound`` (the registry's
+  accuracy contract; a scheme that breaks its own declaration fails the
+  sweep, which is what CI's quant parity smoke runs).
+* **tok_per_s** — steady-state batched decode throughput through
+  `ServeEngine` (same methodology as benchmarks/serving_throughput.py:
+  admit all slots, warm up, time lock-step decodes).
+
+Records go to results/quant/<arch><suffix>.json.
+
+    PYTHONPATH=src python -m benchmarks.quant_tradeoff [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_config, reduced
+from repro.core import apply_moe, dispatch_config, init_moe_params
+from repro.execution import available_executors, get_executor
+from repro.models import RunConfig, init_params
+from repro.quantization import (QuantTensor, available_schemes, get_scheme,
+                                quantize_moe_params)
+from repro.serve.engine import Request, ServeEngine
+
+PROMPT_LEN = 6
+
+
+def layer_error(moe_cfg, d_model: int, *, scheme: str, executor: str,
+                policy: str, seed: int = 0) -> float:
+    """Inf-norm relative error of the quantized dispatch (one routed
+    batch).  Quant schemes compare against the fp32 dense oracle on
+    UNQUANTIZED weights; ``none`` compares the capability-contract path
+    (apply_moe: expert_weights + supports_scheme + prepare_weights)
+    against the raw pipeline called on the bare arrays, where its
+    declared bound of 0.0 means *bitwise*."""
+    from repro.core.dispatch import moe_ffn
+    params = init_moe_params(jax.random.key(seed), moe_cfg, d_model)
+    # quantization touches only the ROUTED mats; drop the dense shared
+    # experts so the error cells measure the quantized path undiluted
+    params.pop("shared", None)
+    x = jax.random.normal(jax.random.key(seed + 1), (4, 32, d_model))
+    cfg = dispatch_config(moe_cfg, executor=executor,
+                          schedule_policy=policy)
+    if scheme == "none":
+        y_ref, _ = moe_ffn(x.reshape(-1, d_model), params["router"],
+                           params["w_gate"], params["w_up"],
+                           params["w_down"], cfg)
+        y_ref = y_ref.reshape(x.shape)
+        qp = params
+    else:
+        y_ref, _ = apply_moe(params, x, dispatch_config(moe_cfg,
+                                                        executor="dense"))
+        qp = quantize_moe_params(params, scheme)
+    y_q, _ = apply_moe(qp, x, cfg)
+    return float(jnp.max(jnp.abs(y_q.astype(jnp.float32)
+                                 - y_ref.astype(jnp.float32)))
+                 / jnp.max(jnp.abs(y_ref.astype(jnp.float32))))
+
+
+def gathered_bytes(moe_cfg, d_model: int, scheme: str) -> int:
+    """Stored bytes of ONE layer's routed expert mats under the scheme —
+    what every decode step's expert-weight gather moves."""
+    params = init_moe_params(jax.random.key(0), moe_cfg, d_model)
+    qp = quantize_moe_params(params, scheme) if scheme != "none" else params
+    total = 0
+    for name in ("w_gate", "w_up", "w_down"):
+        w = qp[name]
+        total += w.nbytes if isinstance(w, QuantTensor) else int(w.nbytes)
+    return total
+
+
+def decode_throughput(cfg, params, *, scheme: str, executor: str,
+                      slots: int, steps: int, capacity: int) -> float:
+    rc = RunConfig(q_chunk=64, kv_chunk=64, executor=executor,
+                   schedule_policy="dynamic", quant=scheme)
+    eng = ServeEngine(cfg, params, slots=slots, capacity=capacity, rc=rc)
+    rng = np.random.default_rng(0)
+    for i in range(slots):
+        eng.admit(Request(rid=i,
+                          prompt=rng.integers(0, cfg.vocab_size,
+                                              PROMPT_LEN).astype(np.int32),
+                          max_new=capacity))        # never retires in-window
+    for _ in range(2):                              # warmup: compile
+        eng.step()
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        assert eng.step() == slots
+    return slots * steps / (time.perf_counter() - t0)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="moonshot-v1-16b-a3b")
+    ap.add_argument("--schemes", default=",".join(available_schemes()),
+                    help="comma-separated quant schemes "
+                         f"(registered: {','.join(available_schemes())})")
+    ap.add_argument("--executors", default="xla,pallas",
+                    help="comma-separated executor backends "
+                         f"(registered: {','.join(available_executors())})")
+    ap.add_argument("--policy", default="dynamic",
+                    help="schedule policy for the error cells")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=16)
+    ap.add_argument("--capacity", type=int, default=64)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI parity sweep: none/int8_expert/int4_packed "
+                         "on xla+pallas, 2 slots / 4 steps")
+    ap.add_argument("--out", default="results/quant")
+    args = ap.parse_args()
+
+    schemes = args.schemes.split(",")
+    executors = args.executors.split(",")
+    slots, steps = args.slots, args.steps
+    if args.smoke:
+        schemes = ["none", "int8_expert", "int4_packed"]
+        executors = ["xla", "pallas"]
+        slots, steps = 2, 4
+
+    cfg = reduced(get_config(args.arch))
+    params = init_params(cfg, jax.random.key(0))
+    moe_cfg, d_model = cfg.moe, cfg.d_model
+    print(f"# {args.arch} (reduced) — quant trade-off, "
+          f"schemes={schemes} x executors={executors} "
+          f"[policy={args.policy}, slots={slots}]")
+    print("name,us_per_call,derived")
+
+    records = []
+    for scheme in schemes:
+        bound = get_scheme(scheme).rel_error_bound
+        gbytes = gathered_bytes(moe_cfg, d_model, scheme)
+        for executor in executors:
+            if not get_executor(executor).supports_scheme(scheme):
+                print(f"# skip {scheme} on {executor}: unsupported")
+                continue
+            rel = layer_error(moe_cfg, d_model, scheme=scheme,
+                              executor=executor, policy=args.policy)
+            assert rel <= bound, \
+                (f"{scheme} on {executor}: rel error {rel:.4f} exceeds "
+                 f"the scheme's declared bound {bound}")
+            tps = decode_throughput(cfg, params, scheme=scheme,
+                                    executor=executor, slots=slots,
+                                    steps=steps, capacity=args.capacity)
+            emit(f"quant_{scheme}_{executor}", 1.0 / tps,
+                 f"tok_per_s={tps:.1f} bytes={gbytes} rel={rel:.4f}")
+            records.append({"scheme": scheme, "executor": executor,
+                            "policy": args.policy, "slots": slots,
+                            "steps": steps, "bits": get_scheme(scheme).bits,
+                            "gathered_bytes_per_layer": gbytes,
+                            "rel_error": rel, "rel_error_bound": bound,
+                            "tok_per_s": tps})
+
+    by_scheme = {r["scheme"]: r for r in records}
+    if "int8_expert" in by_scheme and "none" in by_scheme:
+        assert by_scheme["int8_expert"]["gathered_bytes_per_layer"] \
+            < by_scheme["none"]["gathered_bytes_per_layer"]
+    if "int4_packed" in by_scheme and "int8_expert" in by_scheme:
+        assert by_scheme["int4_packed"]["gathered_bytes_per_layer"] \
+            < by_scheme["int8_expert"]["gathered_bytes_per_layer"]
+
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    suffix = "_smoke" if args.smoke else ""
+    out_path = out_dir / f"{args.arch}{suffix}.json"
+    out_path.write_text(json.dumps({"arch": args.arch, "reduced": True,
+                                    "records": records}, indent=1))
+    print(f"# wrote {out_path}")
+    for r in records:
+        print(f"# {r['scheme']:>12s} @ {r['executor']:<6s} "
+              f"{r['gathered_bytes_per_layer']:>9d} B/layer  "
+              f"rel {r['rel_error']:.4f} (bound {r['rel_error_bound']})  "
+              f"{r['tok_per_s']:.1f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -34,6 +34,7 @@ from benchmarks.common import emit
 from repro.configs import get_config, reduced
 from repro.execution import available_executors
 from repro.models import RunConfig, init_params
+from repro.quantization import available_schemes
 from repro.scheduling import available_policies
 from repro.serve.engine import Request, ServeEngine
 
@@ -41,9 +42,9 @@ PROMPT_LEN = 6
 
 
 def run_cell(cfg, params, *, slots: int, policy: str, executor: str,
-             steps: int, capacity: int) -> dict:
+             steps: int, capacity: int, quant: str = "none") -> dict:
     rc = RunConfig(q_chunk=64, kv_chunk=64, executor=executor,
-                   schedule_policy=policy, moe_stats=False)
+                   schedule_policy=policy, quant=quant, moe_stats=False)
     eng = ServeEngine(cfg, params, slots=slots, capacity=capacity, rc=rc)
     rng = np.random.default_rng(0)
     for i in range(slots):
@@ -64,7 +65,7 @@ def run_cell(cfg, params, *, slots: int, policy: str, executor: str,
     emit(f"serve_{policy}_slots{slots}", s_per_step,
          f"tok_per_s={tok_per_s:.1f}")
     return {"slots": slots, "policy": policy, "executor": executor,
-            "steps": steps, "s_per_step": s_per_step,
+            "quant": quant, "steps": steps, "s_per_step": s_per_step,
             "tok_per_s": tok_per_s}
 
 
@@ -78,6 +79,10 @@ def main():
                          f"(registered: {','.join(available_policies())})")
     ap.add_argument("--executor", default="xla",
                     choices=available_executors())
+    ap.add_argument("--quant", default="none",
+                    choices=available_schemes(),
+                    help="expert-weight quantization scheme "
+                         "(repro.quantization registry)")
     ap.add_argument("--steps", type=int, default=32)
     ap.add_argument("--capacity", type=int, default=128)
     ap.add_argument("--smoke", action="store_true",
@@ -105,7 +110,7 @@ def main():
     params = init_params(cfg, jax.random.key(0))
     print(f"# {args.arch} (reduced) — decode throughput, "
           f"slots={slot_counts} x policies={args.policies} "
-          f"[executor={args.executor}]")
+          f"[executor={args.executor}, quant={args.quant}]")
     print("name,us_per_call,derived")
 
     records = []
@@ -113,7 +118,8 @@ def main():
         for slots in slot_counts:
             records.append(run_cell(cfg, params, slots=slots, policy=policy,
                                     executor=args.executor, steps=steps,
-                                    capacity=args.capacity))
+                                    capacity=args.capacity,
+                                    quant=args.quant))
 
     out_dir = pathlib.Path(args.out)
     out_dir.mkdir(parents=True, exist_ok=True)

@@ -1,23 +1,39 @@
 """Serve a small MoE model with batched requests through the slot engine:
-prefill + lock-step decode + slot reuse (continuous batching lite).
+prefill + lock-step decode + slot reuse (continuous batching lite), with
+the routed experts optionally quantized under a registered scheme
+(`--quant`, DESIGN.md §8 — the serving deployment layout).
 
-    PYTHONPATH=src python examples/serve_moe.py
+    PYTHONPATH=src python examples/serve_moe.py [--quant int8_expert]
 """
+import argparse
+
 import numpy as np
 import jax
 
 from repro.configs import get_config, reduced
-from repro.models import init_params
+from repro.models import RunConfig, init_params
+from repro.quantization import available_schemes
 from repro.serve.engine import Request, ServeEngine
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quant", default="int8_expert",
+                    choices=available_schemes(),
+                    help="expert-weight quantization scheme "
+                         "(repro.quantization registry)")
+    args = ap.parse_args()
+
     cfg = reduced(get_config("moonshot-v1-16b-a3b"), layers=2, d_model=64,
                   vocab=256)
     params = init_params(cfg, jax.random.key(0))
-    # no explicit RunConfig: the engine's serving default applies — the
-    # `dynamic` schedule policy (adaptive block-to-expert assignment)
-    engine = ServeEngine(cfg, params, slots=3, capacity=64)
+    # RunConfig.quant is the one selector: the engine quantizes the routed
+    # experts at load; everything else (schedule policy default `dynamic`,
+    # per-request telemetry) keeps the serving defaults
+    engine = ServeEngine(cfg, params, slots=3, capacity=64,
+                         rc=RunConfig(q_chunk=64, kv_chunk=64,
+                                      schedule_policy="dynamic",
+                                      quant=args.quant, moe_stats=True))
 
     rng = np.random.default_rng(0)
     requests = [Request(rid=i,
@@ -27,7 +43,8 @@ def main():
                 for i in range(7)]
     print(f"serving {len(requests)} requests on {engine.slots} slots "
           f"(MoE: {cfg.moe.n_experts} experts, top-{cfg.moe.top_k}, "
-          f"schedule_policy={engine.rc.schedule_policy})")
+          f"schedule_policy={engine.rc.schedule_policy}, "
+          f"quant={engine.rc.quant})")
     done = engine.run(requests)
     assert done == requests, "run() returns completed requests in order"
     for r in requests:

@@ -10,6 +10,13 @@
   may target a DIFFERENT mesh / device count — ``restore(..., shardings=)``
   re-shards on load (tests cover 1-device -> 8-device round-trips).
 * Self-describing: manifest.json carries step, leaf paths/dtypes/shapes.
+* Quantization-aware: scheme-tagged `QuantTensor` params (repro.
+  quantization) are ordinary pytree nodes — their compressed ``q``/``s``
+  leaves serialize as-is (int8 payloads stay int8 on disk, so a quantized
+  checkpoint is ~4x smaller) and the static scheme/dtype tags live in the
+  caller's target treedef.  Restoring a quantized checkpoint into a dense
+  target (or the reverse) is a *structure* mismatch; ``restore`` reports
+  it as such instead of dying on a missing-leaf KeyError.
 
 Multi-host note: in a real pod deployment each host would write its
 process-local shards (jax.experimental.multihost_utils); this single-process
@@ -105,6 +112,14 @@ class CheckpointManager:
         path = self.dir / f"ckpt_{step:08d}"
         data = np.load(path / "leaves.npz")
         leaves, treedef = _flatten(target)
+        if len(data.files) != len(leaves):
+            raise ValueError(
+                f"checkpoint {path.name} holds {len(data.files)} leaves "
+                f"but the restore target flattens to {len(leaves)} — the "
+                f"tree STRUCTURES differ (e.g. a quantized checkpoint "
+                f"restored into a dense target, or vice versa; build the "
+                f"target with the same quantize_params_tree scheme it was "
+                f"saved under)")
         loaded = [data[f"leaf_{i}"] for i in range(len(leaves))]
         for i, (l, tgt) in enumerate(zip(loaded, leaves)):
             if tuple(l.shape) != tuple(tgt.shape):

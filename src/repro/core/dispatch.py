@@ -65,6 +65,10 @@ class MoEDispatchConfig(NamedTuple):
     @property
     def impl(self) -> str:
         """Deprecated alias for ``executor`` (pre-registry field name)."""
+        import warnings
+        warnings.warn("MoEDispatchConfig.impl is deprecated; read "
+                      ".executor (the registry field name)",
+                      DeprecationWarning, stacklevel=2)
         return self.executor
 
 

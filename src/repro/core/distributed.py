@@ -105,10 +105,11 @@ def _ep_sharded_local(params, x_loc, cfg: MoEDispatchConfig, axis: str,
     recv = recv.reshape(ep, E_local, cap, d).transpose(1, 0, 2, 3) \
         .reshape(E_local * ep * cap, d)
 
-    from repro.core.quant import effective_expert_weights
+    from repro.quantization import expert_weights
+    ex = get_executor(cfg.executor)
     sched = _static_schedule(E_local * ep * cap, E_local, M, ep * cap)
-    local_w = effective_expert_weights(params, x_loc.dtype)
-    y = get_executor(cfg.executor).expert_ffn(recv, local_w, sched, cfg)
+    local_w = ex.prepare_weights(expert_weights(params, x_loc.dtype), cfg)
+    y = ex.expert_ffn(recv, local_w, sched, cfg)
 
     # inverse path
     y = y.reshape(E_local, ep, cap, d).transpose(1, 0, 2, 3) \
@@ -155,11 +156,11 @@ def _ep_replicated_local(params, x_loc, cfg: MoEDispatchConfig, axis: str,
         * (sched.block_expert < E_local).astype(jnp.int32),
         block_expert=jnp.minimum(sched.block_expert, E_local - 1))
 
-    from repro.core.quant import effective_expert_weights
+    from repro.quantization import expert_weights
     ex = get_executor(cfg.executor)
     xp = ex.permute(x_loc, sched, cfg)
     scale = combine_scale_rows(sched, w_masked)
-    local_w = effective_expert_weights(params, x_loc.dtype)
+    local_w = ex.prepare_weights(expert_weights(params, x_loc.dtype), cfg)
     y = ex.expert_ffn(xp, local_w, sched, cfg, row_scale=scale)
     out = ex.unpermute(y, sched, None, cfg)
     out = jax.lax.psum(out.astype(jnp.float32), axis)
@@ -221,10 +222,23 @@ def apply_moe_ep(params, x: jnp.ndarray, cfg: MoEDispatchConfig, *,
                                           axis, capacity_factor)
             return y.reshape(B_l, S_l, d), aux
 
+    from repro.execution import get_executor as _get_ex
+    from repro.quantization import params_scheme
+    scheme = params_scheme(params)
+    if not _get_ex(cfg.executor).supports_scheme(scheme):
+        raise ValueError(
+            f"executor {cfg.executor!r} does not support quant scheme "
+            f"{scheme!r} under EP")
+
     routed = {k_: v for k_, v in params.items() if k_ != "shared"}
+    # expert tensors shard over the EP axis on their leading (expert)
+    # axis.  Built per LEAF so quantized params work for ANY scheme: a
+    # QuantTensor contributes its compressed payload + scale leaves (both
+    # expert-leading), and each rank gathers only compressed bytes.
     pspecs = {k_: (P(None, None) if k_ == "router"
-                   else P(axis, None, None))
-              for k_ in routed}
+                   else jax.tree.map(
+                       lambda l: P(axis, *([None] * (l.ndim - 1))), v))
+              for k_, v in routed.items()}
     aux_spec = {"lb_loss": P(), "router_z": P()}
     y, aux = shard_map(
         body, mesh=mesh, in_specs=(pspecs, in_spec),

@@ -44,6 +44,11 @@ def dispatch_config(moe: MoEConfig, *, executor: str | None = None,
                     interpret=None) -> MoEDispatchConfig:
     """``executor`` names a registered backend (repro.execution); ``impl``
     is the deprecated pre-registry alias for it."""
+    if impl is not None:
+        import warnings
+        warnings.warn("dispatch_config(impl=...) is deprecated; pass "
+                      "executor=... (the registry field name)",
+                      DeprecationWarning, stacklevel=2)
     return MoEDispatchConfig(
         n_experts=moe.n_experts, top_k=moe.top_k, block_m=moe.block_m,
         executor=(executor or impl or "xla"),
@@ -57,15 +62,22 @@ def dispatch_config(moe: MoEConfig, *, executor: str | None = None,
 
 
 def apply_moe(params, x: jnp.ndarray, cfg: MoEDispatchConfig):
-    """x: (..., d) -> (y, aux). Flattens leading dims for dispatch."""
-    from repro.core.quant import effective_expert_weights, is_quantized
+    """x: (..., d) -> (y, aux). Flattens leading dims for dispatch.
+
+    Quantized params (scheme-tagged QuantTensor expert mats) flow through
+    the executor's capability contract: ``supports_scheme`` gates, and the
+    backend's ``prepare_weights`` decides between materializing and
+    in-scan per-block dequantization (DESIGN.md §8)."""
     from repro.execution import get_executor
+    from repro.quantization import expert_weights, params_scheme
     shape = x.shape
     x2 = x.reshape(-1, shape[-1])
-    w = effective_expert_weights(params, x.dtype)
-    if is_quantized(params) and get_executor(cfg.executor).materialize_quant:
-        # e.g. the dense oracle / pallas kernels need materialized arrays
-        w = {k: v[jnp.arange(v.shape[0])] for k, v in w.items()}
+    scheme = params_scheme(params)
+    if not get_executor(cfg.executor).supports_scheme(scheme):
+        raise ValueError(
+            f"executor {cfg.executor!r} does not support quant scheme "
+            f"{scheme!r}; requantize the params or pick another backend")
+    w = expert_weights(params, x.dtype)
     y, aux = moe_ffn(x2, params["router"], w["w_gate"],
                      w["w_up"], w["w_down"], cfg)
     if "shared" in params:

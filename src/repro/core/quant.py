@@ -1,91 +1,34 @@
-"""Weight-only int8 expert quantization (beyond-paper, serving path).
+"""Back-compat shim over the unified quantization API (DESIGN.md §8).
 
-MoE decode is gather-bound on expert weights (EXPERIMENTS.md §Perf cell 3):
-every step all-gathers each rank's expert shards over the FSDP axis.
-Storing routed experts as int8 + per-expert fp32 scale halves the gathered
-bytes; dequantization happens per selected expert block inside the grouped
-GEMM scan, after the gather.  Per-expert (not per-channel) scales keep the
-schedule-driven block gather trivial; tests bound the relative error.
+The int8-only module that used to live here (suffix-keyed ``_q``/``_s``
+param dicts, a single hard-coded layout) grew into a registry of
+`QuantScheme`s with a pytree `QuantTensor` — see ``repro.quantization``.
+Serving notes that motivated it are unchanged: MoE decode is gather-bound
+on expert weights (EXPERIMENTS.md §Perf cell 3), so compressing the
+gathered bytes is the dominant lever; dequantization happens per selected
+expert block inside the grouped GEMM scans, after the gather.
+
+Old call sites keep working with the old names; ``quantize_moe_params`` /
+``quantize_params_tree`` now default to the ``int8_expert`` scheme, which
+is the original layout bit-for-bit (same scale formula, same round/clip).
 """
 from __future__ import annotations
 
-from typing import NamedTuple
-
-import jax
 import jax.numpy as jnp
 
-EXPERT_MATS = ("w_gate", "w_up", "w_down")
-
-
-class QuantTensor(NamedTuple):
-    """Acts like the (E, K, N) weight array inside the dispatch scans:
-    ``w[e]`` gathers the int8 block + scale and dequantizes in-register."""
-    q: jnp.ndarray        # (E, K, N) int8
-    s: jnp.ndarray        # (E, 1, 1) f32
-    dtype: jnp.dtype
-
-    @property
-    def shape(self):
-        return self.q.shape
-
-    def __getitem__(self, idx):
-        return (self.q[idx].astype(jnp.float32)
-                * self.s[idx]).astype(self.dtype)
+from repro.quantization import (EXPERT_MATS, QuantTensor,  # noqa: F401
+                                expert_weights, get_scheme, is_quantized,
+                                params_scheme, quantize_moe_params,
+                                quantize_params_tree)
 
 
 def quantize_expert(w: jnp.ndarray):
-    """(E, K, N) -> int8 weights + (E,1,1) scales."""
-    s = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=(1, 2),
-                keepdims=True) / 127.0 + 1e-12
-    q = jnp.clip(jnp.round(w.astype(jnp.float32) / s), -127, 127
-                 ).astype(jnp.int8)
-    return q, s.astype(jnp.float32)
-
-
-def quantize_moe_params(moe_params: dict) -> dict:
-    """Replace routed expert tensors with (q, s) pairs; router/shared stay."""
-    out = {k: v for k, v in moe_params.items() if k not in EXPERT_MATS}
-    for name in EXPERT_MATS:
-        q, s = quantize_expert(moe_params[name])
-        out[name + "_q"] = q
-        out[name + "_s"] = s
-    return out
-
-
-def is_quantized(moe_params: dict) -> bool:
-    return "w_gate_q" in moe_params
+    """(E, K, N) -> int8 payload + (E, 1, 1) scales (the pre-registry
+    int8_expert entry point; prefer get_scheme(...).quantize)."""
+    qt = get_scheme("int8_expert").quantize(w)
+    return qt.q, qt.s
 
 
 def effective_expert_weights(moe_params: dict, dtype) -> dict:
-    """-> {"w_gate": array-or-QuantTensor, ...} for the dispatch pipeline."""
-    if not is_quantized(moe_params):
-        return {k: moe_params[k] for k in EXPERT_MATS}
-    return {name: QuantTensor(moe_params[name + "_q"],
-                              moe_params[name + "_s"], dtype)
-            for name in EXPERT_MATS}
-
-
-def quantize_params_tree(params: dict) -> dict:
-    """Quantize every MoE block in a full model param tree (lm.py layout:
-    stacked 'body' leaves keep their leading group axis — quantization is
-    vmapped over it)."""
-    def walk(node):
-        if isinstance(node, dict):
-            if "w_gate" in node and "router" in node:      # a moe param dict
-                w = node["w_gate"]
-                if w.ndim == 4:                            # stacked (G,E,K,N)
-                    qfn = jax.vmap(quantize_moe_params)
-                    # vmap over dicts: build manually
-                    out = {k: v for k, v in node.items()
-                           if k not in EXPERT_MATS}
-                    for name in EXPERT_MATS:
-                        q, s = jax.vmap(quantize_expert)(node[name])
-                        out[name + "_q"] = q
-                        out[name + "_s"] = s
-                    return out
-                return quantize_moe_params(node)
-            return {k: walk(v) for k, v in node.items()}
-        if isinstance(node, list):
-            return [walk(v) for v in node]
-        return node
-    return walk(params)
+    """Pre-registry name for ``expert_weights`` (dtype retargeting)."""
+    return expert_weights(moe_params, dtype)

@@ -85,7 +85,10 @@ def param_specs(params, cfg: ModelConfig, mesh: Mesh,
             spec = (None, None)
         elif len(core) == 3 and cfg.is_moe \
                 and core[0] == cfg.moe.n_experts:
-            if name.endswith("_s"):             # int8 per-expert scales
+            # routed expert stacks: dense mats, QuantTensor payload ('q')
+            # and scales ('s'), or legacy _q/_s suffix-keyed leaves — all
+            # expert-leading rank 3
+            if name == "s" or name.endswith("_s"):    # quant scales
                 spec = ("model", None, None)
             else:                               # EP ownership + FSDP
                 spec = ("model", fsdp, None)

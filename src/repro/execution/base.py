@@ -87,12 +87,38 @@ class Executor:
     whole-plan `run` is what single-device dispatch calls and is the only
     entry a schedule-free backend (dense) must provide.  ``w`` is always
     the expert-weight mapping {"w_gate", "w_up", "w_down"} of (E, K, N)
-    arrays (or QuantTensors, see core/quant.py).
+    arrays or scheme-tagged QuantTensors (repro.quantization).
+
+    Quantization capability is part of the contract (DESIGN.md §8):
+    ``supports_scheme`` declares which registered schemes the backend can
+    consume, and ``prepare_weights`` is the hook between the plan and the
+    grouped compute — the base implementation materializes QuantTensors
+    to dense stacks (correct for any backend, e.g. the dense oracle); the
+    in-scan backends (xla, pallas) override it to pass compressed weights
+    through and dequantize each gathered block inside the grouped-GEMM
+    scan instead.
     """
 
     name: str = "?"
     needs_schedule: bool = True       # plan carries a BlockSchedule
-    materialize_quant: bool = True    # int8 experts must be gathered dense
+
+    # -- quantization capability --------------------------------------
+    def supports_scheme(self, scheme: str) -> bool:
+        """Whether this backend can consume expert weights quantized
+        under ``scheme``.  The default covers every registered scheme via
+        the materializing ``prepare_weights``; a backend with a narrower
+        contract (a future fused-int8-only kernel) overrides this."""
+        from repro.quantization import available_schemes
+        return scheme in available_schemes()
+
+    def prepare_weights(self, w: dict, cfg) -> dict:
+        """Adapt the expert-weight mapping to this backend, called once
+        per plan execution.  Default: materialize QuantTensors to dense
+        (E, K, N) stacks.  In-scan backends override to the identity and
+        dequantize per gathered block instead."""
+        from repro.quantization import QuantTensor
+        return {k: (v.materialize() if isinstance(v, QuantTensor) else v)
+                for k, v in w.items()}
 
     # -- routing ------------------------------------------------------
     def route(self, logits: jnp.ndarray, cfg):
@@ -127,6 +153,7 @@ class Executor:
                 "carries none (built with with_schedule=False or by a "
                 "needs_schedule=False executor) — rebuild it with "
                 "plan_dispatch(..., with_schedule=True)")
+        w = self.prepare_weights(w, cfg)
         xp = constrain("moe_dispatch", self.permute(x, sched, cfg))
         scale = plan.combine_scale if cfg.fold_combine else None
         y = self.expert_ffn(xp, w, sched, cfg, row_scale=scale)

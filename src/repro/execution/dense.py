@@ -6,7 +6,10 @@ the correctness ground truth for tests and small benchmarks.  Consumes
 only ``plan.weights`` / ``plan.indices``: no permuted layout exists, so the
 plan carries no schedule (``needs_schedule = False``) and the phase-level
 methods are intentionally unavailable (the EP paths require a
-schedule-capable executor such as ``xla`` or ``pallas``).
+schedule-capable executor such as ``xla`` or ``pallas``).  Quantized
+expert weights are materialized to dense stacks up front (the base
+``prepare_weights``) — there is no per-block gather to hook a dequant
+into, and the oracle's job is exact dense semantics.
 """
 from __future__ import annotations
 
@@ -19,5 +22,6 @@ class DenseExecutor(Executor):
     needs_schedule = False
 
     def run(self, x, w, plan: DispatchPlan, cfg):
+        w = self.prepare_weights(w, cfg)
         return ref.moe_ffn_dense_ref(x, w["w_gate"], w["w_up"], w["w_down"],
                                      plan.weights, plan.indices)

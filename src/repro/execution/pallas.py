@@ -4,6 +4,13 @@ The schedule arrays are scalar-prefetch operands, so block-to-expert lookup
 happens in SMEM with no host round-trip.  Runs in interpret mode off-TPU
 (this container validates on CPU); the compiled target is TPU v5e.
 Inference path (forward only).  Routing uses the fused router_topk kernel.
+
+Quantized expert weights pass through ``prepare_weights`` untouched: the
+grouped-GEMM kernels take the compressed payload + per-channel scales as
+operands and dequantize each DMA'd weight block in-kernel (int8 scale
+multiply, or int4 nibble unpack + scale) right before its MXU issue — the
+full dense stack never exists in HBM (kernels/ops.py adapts QuantTensors
+to the kernel operands).
 """
 from __future__ import annotations
 
@@ -16,6 +23,9 @@ from repro.kernels import ops
 
 @register_executor("pallas")
 class PallasExecutor(Executor):
+
+    def prepare_weights(self, w, cfg):
+        return w            # in-kernel dequant: ops.py splits q/s operands
 
     def route(self, logits, cfg):
         return ops.router_topk(

@@ -4,9 +4,11 @@ Per-step expert-weight gathers, pure jnp: differentiable (the training
 path), memory-lean (no (blocks, K, N) weight gather blow-up), compiles at
 full scale on any backend — this is what the multi-pod dry-run lowers.
 Structurally identical traffic to the Pallas kernel, so its roofline terms
-are representative.  The only executor that consumes lazily-dequantized
-QuantTensor expert weights in place (``materialize_quant = False``): the
-per-step ``w[be]`` gather dequantizes one expert block in-register.
+are representative.  Quantized expert weights pass through
+``prepare_weights`` untouched: the per-step ``w[be]`` gather IS the
+per-block dequant hook — ``QuantTensor.__getitem__`` routes through the
+scheme's ``dequantize``, so each scan step gathers compressed bytes and
+expands one expert block in-register (any registered scheme).
 """
 from __future__ import annotations
 
@@ -57,7 +59,9 @@ def grouped_gemm_xla(x, w, sched: BlockSchedule, row_scale=None):
 
 @register_executor("xla")
 class XlaExecutor(Executor):
-    materialize_quant = False
+
+    def prepare_weights(self, w, cfg):
+        return w            # in-scan dequant: w[be] expands per block
 
     def permute(self, x, sched, cfg):
         return ref.permute_ref(x, sched)

@@ -13,6 +13,11 @@ HBM traffic (T tokens, K = d_model, F = d_ffn, bf16):
   (*weight traffic identical in both; the paper counts a subset of these
   terms and lands on ~35% — our accounting in benchmarks/stage_roofline.py
   reports both conventions.)
+
+Quantized weights: like grouped_gemm.py, ``w_format`` turns both weight
+operands into compressed payloads with per-channel ``w*_scale`` operands,
+dequantized per DMA'd block in VREGs right before the MXU issues
+(DESIGN.md §8).  ``w_format="dense"`` is the original kernel (bitwise).
 """
 from __future__ import annotations
 
@@ -24,13 +29,14 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._compat import CompilerParams
+from repro.kernels.grouped_gemm import dequant_weight_block
 
 
 def _kernel(block_expert_ref, block_active_ref,       # scalar prefetch
-            x_ref, wg_ref, wu_ref,                    # inputs
+            x_ref, wg_ref, wu_ref, wsg_ref, wsu_ref,  # inputs (ws* opt.)
             out_ref,                                  # output
             acc_g_ref, acc_u_ref,                     # scratch
-            *, n_k: int):
+            *, n_k: int, w_format: str):
     m, _, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
     active = block_active_ref[m] == 1
 
@@ -42,9 +48,15 @@ def _kernel(block_expert_ref, block_active_ref,       # scalar prefetch
     @pl.when(active)
     def _accum():
         x = x_ref[...]                                # one VMEM A-tile ...
-        acc_g_ref[...] += jnp.dot(x, wg_ref[0],      # ... two MXU issues
+        wg = dequant_weight_block(
+            wg_ref[0], None if wsg_ref is None else wsg_ref[...],
+            w_format, x.dtype)
+        wu = dequant_weight_block(
+            wu_ref[0], None if wsu_ref is None else wsu_ref[...],
+            w_format, x.dtype)
+        acc_g_ref[...] += jnp.dot(x, wg,              # ... two MXU issues
                                   preferred_element_type=jnp.float32)
-        acc_u_ref[...] += jnp.dot(x, wu_ref[0],
+        acc_u_ref[...] += jnp.dot(x, wu,
                                   preferred_element_type=jnp.float32)
 
     @pl.when(k == n_k - 1)
@@ -56,41 +68,71 @@ def _kernel(block_expert_ref, block_active_ref,       # scalar prefetch
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block_m", "block_n", "block_k", "interpret", "out_dtype"))
+    static_argnames=("block_m", "block_n", "block_k", "interpret",
+                     "out_dtype", "w_format"))
 def fused_gate_up(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
-                  block_expert: jnp.ndarray, block_active: jnp.ndarray, *,
+                  block_expert: jnp.ndarray, block_active: jnp.ndarray,
+                  wg_scale: jnp.ndarray | None = None,
+                  wu_scale: jnp.ndarray | None = None, *,
                   block_m: int, block_n: int, block_k: int,
+                  w_format: str = "dense",
                   interpret: bool = False, out_dtype=None) -> jnp.ndarray:
-    """x: (capacity, K); w_gate/w_up: (E, K, F) -> silu(x@wg)*(x@wu): (capacity, F)."""
+    """x: (capacity, K); w_gate/w_up: (E, K, F) dense or the scheme's
+    packed payload; w*_scale: (E, F) f32 per-channel scales (quant only)
+    -> silu(x@wg)*(x@wu): (capacity, F).  ``block_k`` is in LOGICAL K."""
     capacity, K = x.shape
-    _, _, F = w_gate.shape
+    F = w_gate.shape[-1]
+    pack = 2 if w_format == "int4" else 1
     assert w_up.shape == w_gate.shape
+    assert w_gate.shape[1] * pack == K, (w_gate.shape, K, w_format)
+    assert (wg_scale is not None) == (w_format != "dense"), w_format
     assert capacity % block_m == 0 and K % block_k == 0 and F % block_n == 0, (
         f"shape {(capacity, K, F)} not divisible by blocks "
         f"{(block_m, block_k, block_n)}")
+    assert block_k % pack == 0, (block_k, w_format)
     n_m, n_n, n_k = capacity // block_m, F // block_n, K // block_k
+    quant = w_format != "dense"
+
+    w_spec = pl.BlockSpec((1, block_k // pack, block_n),
+                          lambda m, n, k, be, ba: (be[m], k, n))
+    in_specs = [
+        pl.BlockSpec((block_m, block_k), lambda m, n, k, be, ba: (m, k)),
+        w_spec, w_spec,
+    ]
+    operands = [x, w_gate, w_up]
+    if quant:
+        s_spec = pl.BlockSpec((1, block_n),
+                              lambda m, n, k, be, ba: (be[m], n))
+        in_specs += [s_spec, s_spec]
+        operands += [wg_scale.astype(jnp.float32),
+                     wu_scale.astype(jnp.float32)]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(n_m, n_n, n_k),
-        in_specs=[
-            pl.BlockSpec((block_m, block_k), lambda m, n, k, be, ba: (m, k)),
-            pl.BlockSpec((1, block_k, block_n),
-                         lambda m, n, k, be, ba: (be[m], k, n)),
-            pl.BlockSpec((1, block_k, block_n),
-                         lambda m, n, k, be, ba: (be[m], k, n)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((block_m, block_n),
                                lambda m, n, k, be, ba: (m, n)),
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32),
                         pltpu.VMEM((block_m, block_n), jnp.float32)],
     )
+
+    def kernel(be, ba, *refs):
+        # refs: x, wg, wu, [wsg, wsu], out, acc_g, acc_u
+        it = iter(refs)
+        x_ref, wg_ref, wu_ref = next(it), next(it), next(it)
+        wsg_ref = next(it) if quant else None
+        wsu_ref = next(it) if quant else None
+        out_ref, acc_g_ref, acc_u_ref = next(it), next(it), next(it)
+        _kernel(be, ba, x_ref, wg_ref, wu_ref, wsg_ref, wsu_ref,
+                out_ref, acc_g_ref, acc_u_ref, n_k=n_k, w_format=w_format)
+
     fn = pl.pallas_call(
-        functools.partial(_kernel, n_k=n_k),
+        kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((capacity, F), out_dtype or x.dtype),
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )
-    return fn(block_expert, block_active, x, w_gate, w_up)
+    return fn(block_expert, block_active, *operands)

@@ -2,14 +2,17 @@
 
 Handles block-size selection (MXU-aligned divisors), automatic
 ``interpret=True`` off-TPU (this container validates kernels on CPU in
-interpret mode; the compiled target is TPU v5e), and adapts the
-schedule-carrying call signatures to the BlockSchedule tuple.
+interpret mode; the compiled target is TPU v5e), adapts the
+schedule-carrying call signatures to the BlockSchedule tuple, and splits
+scheme-tagged ``QuantTensor`` expert weights into the kernels' compressed
+payload + per-channel-scale operands (in-kernel dequant, DESIGN.md §8).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.quantization import QuantTensor, get_scheme
 from repro.scheduling import BlockSchedule
 from repro.kernels import fused_gate_up as _fgu
 from repro.kernels import grouped_gemm as _gg
@@ -39,6 +42,29 @@ def pick_block(n: int, target: int, align: int = 128) -> int:
     return 1
 
 
+def _weight_operands(w):
+    """Split an expert-weight stack into kernel operands.
+
+    Dense array -> (w, None, "dense", (K, N)); QuantTensor -> (payload,
+    (E, N) f32 channel scales, scheme kernel_format, logical (K, N)).
+    """
+    if isinstance(w, QuantTensor):
+        sch = get_scheme(w.scheme)
+        K, N = w.shape[-2:]
+        return w.q, sch.channel_scales(w), sch.kernel_format, (K, N)
+    return w, None, "dense", tuple(w.shape[-2:])
+
+
+def _pick_block_k(K: int, target: int, w_format: str) -> int:
+    """Like pick_block, but an int4-packed payload DMAs block_k//2 rows,
+    so the logical block must stay even."""
+    bk = pick_block(K, target)
+    if w_format == "int4":
+        while bk % 2 or K % bk:
+            bk -= 1                    # K is even (asserted at pack time)
+    return bk
+
+
 # ----------------------------------------------------------------------
 def router_topk(logits: jnp.ndarray, *, top_k: int, gating: str = "softmax",
                 norm_topk: bool = False, routed_scale: float = 1.0,
@@ -65,27 +91,34 @@ def unpermute(y: jnp.ndarray, sched: BlockSchedule,
                              interpret=_interp(interpret))
 
 
-def grouped_gemm(x: jnp.ndarray, w: jnp.ndarray, sched: BlockSchedule,
+def grouped_gemm(x: jnp.ndarray, w, sched: BlockSchedule,
                  row_scale: jnp.ndarray | None = None, *,
                  block_n: int = 512, block_k: int = 512,
                  interpret: bool | None = None) -> jnp.ndarray:
-    _, K, N = w.shape
+    """``w``: (E, K, N) array or a QuantTensor (in-kernel dequant)."""
+    wq, ws, fmt, (K, N) = _weight_operands(w)
     return _gg.grouped_gemm(
-        x, w, sched.block_expert, sched.block_active, row_scale,
-        block_m=sched.block_m,
-        block_n=pick_block(N, block_n), block_k=pick_block(K, block_k),
+        x, wq, sched.block_expert, sched.block_active, row_scale, ws,
+        block_m=sched.block_m, w_format=fmt,
+        block_n=pick_block(N, block_n),
+        block_k=_pick_block_k(K, block_k, fmt),
         interpret=_interp(interpret))
 
 
-def fused_gate_up(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+def fused_gate_up(x: jnp.ndarray, w_gate, w_up,
                   sched: BlockSchedule, *, block_n: int = 512,
                   block_k: int = 512,
                   interpret: bool | None = None) -> jnp.ndarray:
-    _, K, F = w_gate.shape
+    """``w_gate``/``w_up``: (E, K, F) arrays or QuantTensors under ONE
+    scheme (in-kernel dequant)."""
+    wgq, wsg, fmt_g, (K, F) = _weight_operands(w_gate)
+    wuq, wsu, fmt_u, _ = _weight_operands(w_up)
+    assert fmt_g == fmt_u, (fmt_g, fmt_u)
     return _fgu.fused_gate_up(
-        x, w_gate, w_up, sched.block_expert, sched.block_active,
-        block_m=sched.block_m,
-        block_n=pick_block(F, block_n), block_k=pick_block(K, block_k),
+        x, wgq, wuq, sched.block_expert, sched.block_active, wsg, wsu,
+        block_m=sched.block_m, w_format=fmt_g,
+        block_n=pick_block(F, block_n),
+        block_k=_pick_block_k(K, block_k, fmt_g),
         interpret=_interp(interpret))
 
 

@@ -32,7 +32,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
              save_hlo: bool = False, accum=None, layout: str = "fsdp",
              pin_grads: bool = False, capacity_factor=None,
              variant: str = "", drop_rules=(),
-             quant_experts: bool = False, executor: str = None) -> dict:
+             quant: str = "none", executor: str = None) -> dict:
     import jax
 
     from repro.analysis.hlo import collective_report
@@ -58,8 +58,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         rc = rc._replace(capacity_factor=capacity_factor)
     if executor is not None:
         rc = rc._replace(executor=executor)
+    rc = rc._replace(quant=quant)
     ci = cell_inputs(arch, shape, mesh, rc, accum=accum, layout=layout,
-                     pin_grads=pin_grads, quant_experts=quant_experts)
+                     pin_grads=pin_grads)
     for r in drop_rules:
         ci.rules.pop(r, None)
     if variant:
@@ -137,8 +138,11 @@ def main() -> int:
                     help="tag appended to the output filename (perf runs)")
     ap.add_argument("--drop-rule", action="append", default=[],
                     help="remove an activation-sharding rule (perf exp)")
+    ap.add_argument("--quant", default=None,
+                    help="expert-weight quantization scheme "
+                         "(repro.quantization registry; default: none)")
     ap.add_argument("--quant-experts", action="store_true",
-                    help="int8 weight-only routed experts (serving)")
+                    help="DEPRECATED: alias for --quant int8_expert")
     ap.add_argument("--executor", default=None,
                     help="MoE executor backend override "
                          "(repro.execution registry; default: xla)")
@@ -178,12 +182,14 @@ def main() -> int:
                         print(r.stderr[-2000:], flush=True)
         return 1 if failures else 0
 
+    from repro.quantization import resolve_quant_cli
     rec = run_cell(args.arch, args.shape, args.multi_pod,
                    save_hlo=args.save_hlo, accum=args.accum,
                    layout=args.layout, pin_grads=args.pin_grads,
                    capacity_factor=args.capacity_factor,
                    variant=args.variant, drop_rules=args.drop_rule,
-                   quant_experts=args.quant_experts, executor=args.executor)
+                   quant=resolve_quant_cli(args.quant, args.quant_experts),
+                   executor=args.executor)
     tag = f"{args.arch}.{args.shape}.{rec['mesh']}"
     if args.variant:
         tag += f".{args.variant}"

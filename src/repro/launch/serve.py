@@ -1,17 +1,19 @@
-"""Serving launcher: load (or init) weights, optionally int8-quantize the
-routed experts (the §Perf cell-3 deployment layout), and run batched
+"""Serving launcher: load (or init) weights, optionally quantize the
+routed experts under a registered scheme (`--quant`, DESIGN.md §8 — int8
+per-expert is the §Perf cell-3 deployment layout), and run batched
 requests through the continuous-batching engine — all active slots decode
 in ONE jitted step over a single batched KV cache, so every MoE layer
 dispatches the whole decode batch in one plan.
 
     PYTHONPATH=src python -m repro.launch.serve --arch moonshot-v1-16b-a3b \\
-        --reduce --requests 6 --quant-experts --executor xla --slots 4
+        --reduce --requests 6 --quant int8_expert --executor xla --slots 4
 """
 import argparse
 
 
 def main():
     from repro.execution import available_executors
+    from repro.quantization import available_schemes, resolve_quant_cli
     from repro.scheduling import available_policies
     from repro.serve.admission import available_admission_policies
 
@@ -29,7 +31,11 @@ def main():
                     help="decode-step budget for the whole run; requests "
                          "still in flight when it runs out are reported "
                          "(done=False, partial output kept)")
-    ap.add_argument("--quant-experts", action="store_true")
+    ap.add_argument("--quant", default=None, choices=available_schemes(),
+                    help="expert-weight quantization scheme "
+                         "(repro.quantization registry; default: none)")
+    ap.add_argument("--quant-experts", action="store_true",
+                    help="DEPRECATED: alias for --quant int8_expert")
     ap.add_argument("--executor", default="xla",
                     choices=available_executors(),
                     help="MoE executor backend (repro.execution registry)")
@@ -63,16 +69,17 @@ def main():
         state = mgr.restore(jax.eval_shape(lambda: {
             "params": init_params(cfg, jax.random.key(0))}))
         params = state["params"]
-    if args.quant_experts and cfg.is_moe:
-        from repro.core.quant import quantize_params_tree
-        params = quantize_params_tree(params)
-        print("routed experts quantized to int8 (serving layout)")
+    quant = resolve_quant_cli(args.quant, args.quant_experts)
+    if quant != "none" and cfg.is_moe:
+        print(f"routed experts quantized under scheme {quant!r} "
+              f"(serving layout)")
 
     engine = ServeEngine(cfg, params, slots=args.slots,
                          capacity=args.capacity, admission=args.admission,
                          rc=RunConfig(q_chunk=64, kv_chunk=64,
                                       executor=args.executor,
                                       schedule_policy=args.schedule_policy,
+                                      quant=quant if cfg.is_moe else "none",
                                       moe_stats=bool(cfg.is_moe)))
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,

@@ -95,15 +95,17 @@ def cell_inputs(arch: str, shape: ShapeConfig, mesh: Mesh,
                 quant_experts: bool = False) -> CellInputs:
     cfg = get_config(arch)
     rc = rc or dryrun_runconfig(cfg, shape)
+    from repro.quantization import resolve_quant_cli
+    quant = resolve_quant_cli(rc.quant, quant_experts)
     ns = lambda tree: jax.tree.map(
         lambda s: NamedSharding(mesh, s), tree,
         is_leaf=lambda x: isinstance(x, P))
 
     def _init(key):
         p = init_params(cfg, key, param_dtype=rc.param_dtype)
-        if quant_experts:
-            from repro.core.quant import quantize_params_tree
-            p = quantize_params_tree(p)
+        if quant != "none" and cfg.is_moe:
+            from repro.quantization import quantize_params_tree
+            p = quantize_params_tree(p, quant)
         return p
 
     params_abs = jax.eval_shape(_init, jax.random.key(0))

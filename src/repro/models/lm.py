@@ -54,6 +54,10 @@ class RunConfig(NamedTuple):
     capacity_factor: float = 2.0     # EP buffer headroom
     schedule_policy: str = "fixed"   # fixed | capacity_factor | dynamic
                                      # (serving engine defaults to dynamic)
+    quant: str = "none"              # expert-weight QuantScheme for serving
+                                     # (repro.quantization registry; the
+                                     # serve engine / launchers quantize
+                                     # params at load under this scheme)
     moe_stats: bool = False          # surface per-plan ScheduleStats in aux
                                      # (single-device dispatch only: EP plans
                                      # carry no schedule)

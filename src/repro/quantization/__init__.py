@@ -1,0 +1,116 @@
+"""Unified quantization API (DESIGN.md §8).
+
+Three pieces, mirroring the scheduling (§3) and executor (§6) registries:
+
+* `QuantScheme` + registry (base.py / schemes.py) — ``none``,
+  ``int8_expert`` (the original serving layout), ``int8_channel``,
+  ``int4_packed``; each owns quantize/dequantize/declared error bound.
+* `QuantTensor` (tensor.py) — pytree-registered compressed weight stack
+  (array leaves ``q``/``s``, static aux dtype + scheme name) replacing the
+  old ``_q``/``_s`` suffix-keyed param dicts.
+* Param-tree helpers (this module) — scheme-tagged MoE param trees:
+  ``quantize_moe_params`` / ``quantize_params_tree`` produce trees whose
+  routed expert mats are QuantTensors; ``params_scheme`` reads the tag
+  back; ``expert_weights`` hands the dispatch pipeline its weight mapping.
+
+Executors consume these through the capability contract in
+execution/base.py: ``supports_scheme(scheme)`` + ``prepare_weights`` (the
+dense oracle materializes; the xla scan and the pallas kernels dequantize
+gathered blocks in-scan).
+"""
+from __future__ import annotations
+
+import warnings
+
+from repro.quantization.base import (EXPERT_MATS, QuantScheme,  # noqa: F401
+                                     available_schemes, get_scheme,
+                                     register_scheme)
+from repro.quantization.schemes import (Int4PackedScheme,  # noqa: F401
+                                        Int8ChannelScheme,
+                                        Int8ExpertScheme, NoneScheme,
+                                        pack_int4, unpack_int4)
+from repro.quantization.tensor import QuantTensor  # noqa: F401
+
+
+# ----------------------------------------------------------------------
+# Scheme-tagged MoE param trees
+# ----------------------------------------------------------------------
+def quantize_moe_params(moe_params: dict, scheme: str = "int8_expert"
+                        ) -> dict:
+    """Replace the routed expert mats with scheme-tagged QuantTensors;
+    router / shared experts stay dense (router accuracy gates everything
+    and shared experts are dense compute)."""
+    sch = get_scheme(scheme)
+    out = dict(moe_params)
+    for name in EXPERT_MATS:
+        cur = moe_params[name]
+        if isinstance(cur, QuantTensor):
+            if cur.scheme == sch.name:
+                continue                      # idempotent
+            raise ValueError(
+                f"param {name!r} is already quantized under "
+                f"{cur.scheme!r}; dequantize before re-quantizing as "
+                f"{sch.name!r}")
+        out[name] = sch.quantize(cur)
+    return out
+
+
+def is_quantized(moe_params: dict) -> bool:
+    return isinstance(moe_params.get("w_gate"), QuantTensor)
+
+
+def params_scheme(moe_params: dict) -> str:
+    """The scheme tag of a MoE param dict ('none' for dense params)."""
+    w = moe_params.get("w_gate")
+    return w.scheme if isinstance(w, QuantTensor) else "none"
+
+
+def expert_weights(moe_params: dict, dtype=None) -> dict:
+    """-> {"w_gate": array-or-QuantTensor, ...} for the dispatch pipeline.
+    ``dtype`` retargets dequantization to the layer's compute dtype."""
+    out = {}
+    for name in EXPERT_MATS:
+        w = moe_params[name]
+        if isinstance(w, QuantTensor) and dtype is not None:
+            w = w.with_dtype(dtype)
+        out[name] = w
+    return out
+
+
+def quantize_params_tree(params: dict, scheme: str = "int8_expert") -> dict:
+    """Quantize every MoE block in a full model param tree (models/lm.py
+    layout).  Stacked 'body' leaves keep their leading layer-group axis —
+    the schemes are rank-agnostic over leading axes, so (G, E, K, N)
+    quantizes directly.  ``scheme='none'`` returns the tree unchanged."""
+    if get_scheme(scheme).name == "none":
+        return params
+
+    def walk(node):
+        if isinstance(node, dict):
+            if "w_gate" in node and "router" in node:      # a moe param dict
+                return quantize_moe_params(node, scheme)
+            return {k: walk(v) for k, v in node.items()}
+        if isinstance(node, list):
+            return [walk(v) for v in node]
+        return node
+    return walk(params)
+
+
+# ----------------------------------------------------------------------
+# CLI shim
+# ----------------------------------------------------------------------
+def resolve_quant_cli(quant: str | None, quant_experts: bool = False) -> str:
+    """One ``--quant <scheme>`` selector for every launcher; maps the
+    deprecated ``--quant-experts`` on/off flag onto ``int8_expert``."""
+    if quant_experts:
+        warnings.warn(
+            "--quant-experts is deprecated; use --quant int8_expert "
+            "(the equivalent scheme in the quantization registry)",
+            DeprecationWarning, stacklevel=2)
+        # only an UNSET --quant is overridden: an explicit scheme —
+        # including an explicit "none" — always wins over the legacy flag
+        if quant is None:
+            quant = "int8_expert"
+    quant = quant or "none"
+    get_scheme(quant)                   # uniform unknown-scheme error
+    return quant

@@ -1,0 +1,94 @@
+"""Quantization-scheme layer: the `QuantScheme` contract + registry.
+
+Mirrors the schedule-policy registry (scheduling/base.py, DESIGN.md §3)
+and the executor registry (execution/base.py, §6): a scheme registers
+under a name, owns the complete lifecycle of one compressed layout —
+quantize, dequantize, kernel operand view — and *declares* its accuracy
+contract so consumers (tests, benchmarks, capability checks) never
+hard-code per-scheme knowledge:
+
+* ``quantize(w)``   — dense ``(..., E, K, N)`` expert stack -> `QuantTensor`
+  (or a passthrough array for the ``none`` scheme).  Rank-agnostic: a
+  stacked layer-group tree ``(G, E, K, N)`` quantizes without vmap.
+* ``dequantize(q, s, dtype)`` — the inverse, at ANY granularity: the full
+  stack (materialization), one expert's block (the grouped-GEMM scan's
+  per-block gather ``w[be]``), or an advanced-indexed batch of blocks.
+* ``rel_error_bound`` — declared max relative error (inf-norm) of a MoE
+  layer output under this scheme vs the fp32 dense oracle.  The
+  acceptance tests assert every scheme honors its own declaration on the
+  paper configs.
+* ``bits`` / ``kernel_format`` / ``channel_scales`` — what the Pallas
+  kernels need to dequantize a gathered block in-kernel (kernels/ops.py).
+
+Adding a scheme (fp8, grouped int4, ...) is one registered class: no
+executor, checkpoint, EP, or CLI code changes.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax.numpy as jnp
+
+from repro.quantization.tensor import QuantTensor
+
+# the routed expert matrices every MoE param dict carries (core layout)
+EXPERT_MATS = ("w_gate", "w_up", "w_down")
+
+
+class QuantScheme:
+    """Contract for one compressed expert-weight layout."""
+
+    name: str = "?"
+    bits: int = 32                  # logical bits per weight element
+    rel_error_bound: float = 0.0    # declared layer-output inf-norm rel err
+    kernel_format: str = "dense"    # Pallas in-kernel dequant mode:
+                                    # "dense" | "int8" | "int4"
+
+    # -- lifecycle ------------------------------------------------------
+    def quantize(self, w: jnp.ndarray):
+        """(..., E, K, N) dense stack -> QuantTensor (or passthrough)."""
+        raise NotImplementedError
+
+    def dequantize(self, q, s, dtype):
+        """Invert at any granularity: full stack, one expert block, or an
+        advanced-indexed batch of blocks."""
+        raise NotImplementedError
+
+    def logical_shape(self, q_shape) -> tuple:
+        """Dense-stack shape from the stored payload's shape."""
+        return tuple(q_shape)
+
+    def channel_scales(self, qt: QuantTensor) -> jnp.ndarray:
+        """(E, N) f32 per-output-channel scales for the Pallas kernels
+        (per-expert scales broadcast; the kernel applies them uniformly)."""
+        E = qt.s.shape[0]
+        N = self.logical_shape(qt.q.shape)[-1]
+        # (E, 1) broadcasts across channels; (E, N) is already per-channel
+        return jnp.broadcast_to(qt.s.reshape(E, -1),
+                                (E, N)).astype(jnp.float32)
+
+
+_SCHEMES: Dict[str, QuantScheme] = {}
+
+
+def register_scheme(name: str) -> Callable[[type], type]:
+    """Class decorator: instantiate and register a QuantScheme."""
+    def deco(cls: type) -> type:
+        cls.name = name
+        _SCHEMES[name] = cls()
+        return cls
+    return deco
+
+
+def get_scheme(name) -> QuantScheme:
+    if isinstance(name, QuantScheme):
+        return name
+    try:
+        return _SCHEMES[name]
+    except KeyError:
+        raise ValueError(f"unknown quant scheme {name!r}; "
+                         f"available: {available_schemes()}") from None
+
+
+def available_schemes():
+    return sorted(_SCHEMES)

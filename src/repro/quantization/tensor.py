@@ -1,0 +1,102 @@
+"""`QuantTensor`: a compressed expert-weight stack that is a real pytree.
+
+The pre-redesign version was a NamedTuple `(q, s, dtype)` — which made the
+dequant *dtype* a tree leaf: `jax.tree_util` flattened it as data, `jit`
+re-traced nothing on dtype changes, and checkpoint/sharding code had to
+special-case the phantom leaf.  Here the tensor is registered with
+`register_pytree_with_keys_class`:
+
+* **array leaves** — ``q`` (the stored payload, layout owned by the scheme:
+  e.g. ``(E, K, N) int8`` or two-nibbles-per-byte ``(E, K//2, N) int8``)
+  and ``s`` (the scales, ``(E, 1, 1)`` per-expert or ``(E, 1, N)``
+  per-output-channel, f32);
+* **static aux** — the dequant target ``dtype`` and the ``scheme`` name.
+  Both are hashable, so they key jit caches: a jitted function taking a
+  quantized tree re-traces exactly when the scheme (or dtype) changes and
+  never when only the payload does (tested in tests/test_quantization.py).
+
+Because the leaves are ordinary arrays with the expert axis leading,
+QuantTensors flow through `lax.scan` over stacked layer groups, shard_map
+partition specs, checkpoint flatten/unflatten, and `jax.tree.map` with no
+special-casing anywhere.
+
+Inside the dispatch scans a QuantTensor acts like the dense ``(E, K, N)``
+weight stack it compresses: ``w[e]`` gathers the compressed block + scale
+and dequantizes in-register via the scheme's ``dequantize`` — this is the
+per-block dequant hook the grouped-GEMM scan calls (DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+@jax.tree_util.register_pytree_with_keys_class
+class QuantTensor:
+    """Scheme-tagged compressed weight stack (see module docstring)."""
+
+    __slots__ = ("q", "s", "dtype", "scheme")
+
+    def __init__(self, q, s, dtype, scheme: str):
+        self.q = q
+        self.s = s
+        # normalize so aux_data hashes/compares stably across spellings
+        # (jnp.float32 vs np.dtype('float32') vs "float32")
+        self.dtype = np.dtype(dtype)
+        self.scheme = scheme
+
+    # -- pytree protocol ------------------------------------------------
+    def tree_flatten_with_keys(self):
+        return (((jax.tree_util.GetAttrKey("q"), self.q),
+                 (jax.tree_util.GetAttrKey("s"), self.s)),
+                (self.dtype, self.scheme))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        q, s = children
+        return cls(q, s, aux[0], aux[1])
+
+    # -- dense-stack interface (what the dispatch pipeline consumes) ----
+    @property
+    def _scheme(self):
+        from repro.quantization.base import get_scheme
+        return get_scheme(self.scheme)
+
+    @property
+    def shape(self):
+        """LOGICAL shape of the dense stack this compresses (a packed
+        scheme stores fewer physical elements)."""
+        return self._scheme.logical_shape(self.q.shape)
+
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+    @property
+    def nbytes(self) -> int:
+        """Stored payload bytes — what a weight gather actually moves."""
+        return int(self.q.size) * self.q.dtype.itemsize \
+            + int(self.s.size) * self.s.dtype.itemsize
+
+    def __getitem__(self, idx):
+        """Gather + dequantize: the per-block hook of the grouped-GEMM
+        scans.  ``idx`` may be a traced scalar (a `lax.scan` step's
+        block-expert id) or an index array."""
+        return self._scheme.dequantize(self.q[idx], self.s[idx], self.dtype)
+
+    def materialize(self):
+        """Full dense (E, K, N) stack in the target dtype (what
+        schedule-free backends such as the dense oracle consume)."""
+        return self._scheme.dequantize(self.q, self.s, self.dtype)
+
+    def with_dtype(self, dtype) -> "QuantTensor":
+        """Same payload, different dequant target (the layer applies the
+        model's compute dtype at dispatch time)."""
+        if np.dtype(dtype) == self.dtype:
+            return self
+        return QuantTensor(self.q, self.s, dtype, self.scheme)
+
+    def __repr__(self):
+        return (f"QuantTensor(scheme={self.scheme!r}, shape={self.shape}, "
+                f"stored={tuple(self.q.shape)}:{self.q.dtype}, "
+                f"dtype={self.dtype})")

@@ -59,13 +59,18 @@ class ServeEngine:
                  capacity: int = 256, rc: Optional[RunConfig] = None,
                  admission: str = "fcfs"):
         self.cfg = cfg
-        self.params = params
         # serving default: the dynamic schedule policy — production traffic
         # is skewed and decode batches are small, exactly the regime where
         # the fixed tile layout pads worst (DESIGN.md §3) — with per-plan
         # telemetry on so operators see padding/drop behavior per request
         self.rc = rc or RunConfig(q_chunk=64, kv_chunk=64,
                                   schedule_policy="dynamic", moe_stats=True)
+        if self.rc.quant != "none" and cfg.is_moe:
+            # load-time transform: routed experts compressed under the
+            # selected scheme (idempotent if params already carry the tag)
+            from repro.quantization import quantize_params_tree
+            params = quantize_params_tree(params, self.rc.quant)
+        self.params = params
         self.slots = slots
         self.capacity = capacity
         # ONE batched cache; slot s owns row s (batch axis of every leaf)

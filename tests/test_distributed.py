@@ -33,7 +33,7 @@ mesh = make_debug_mesh(data=2, model=4)
 moe = MoEConfig(n_experts=8, top_k=2, d_ff_expert=32, n_shared_experts=1, block_m=8)
 params = init_moe_params(jax.random.key(0), moe, 16)
 x = jax.random.normal(jax.random.key(1), (4, 32, 16))
-dcfg = dispatch_config(moe, impl="xla")
+dcfg = dispatch_config(moe, executor="xla")
 y_ref, _ = apply_moe(params, x, dcfg)
 with set_mesh(mesh):
     y_ep, _ = jax.jit(lambda p, x: apply_moe_ep(p, x, dcfg, capacity_factor=8.0))(params, x)
@@ -56,7 +56,7 @@ mesh = make_debug_mesh(data=1, model=4)
 moe = MoEConfig(n_experts=4, top_k=1, d_ff_expert=16, block_m=8)
 params = init_moe_params(jax.random.key(0), moe, 8)
 x = jax.random.normal(jax.random.key(1), (1, 64, 8))
-dcfg = dispatch_config(moe, impl="xla")
+dcfg = dispatch_config(moe, executor="xla")
 with set_mesh(mesh):
     tight, _ = jax.jit(lambda p, x: apply_moe_ep(p, x, dcfg, capacity_factor=0.25))(params, x)
     loose, _ = jax.jit(lambda p, x: apply_moe_ep(p, x, dcfg, capacity_factor=8.0))(params, x)
@@ -87,7 +87,7 @@ moe = MoEConfig(n_experts=8, top_k=2, d_ff_expert=32, block_m=8,
 params = init_moe_params(jax.random.key(0), moe, 16)
 x = jax.random.normal(jax.random.key(1), (1, 64, 16))
 for pol in ("capacity_factor", "dynamic"):
-    dcfg = dispatch_config(moe, impl="xla", schedule_policy=pol)
+    dcfg = dispatch_config(moe, executor="xla", schedule_policy=pol)
     y_ref, _ = apply_moe(params, x, dcfg)
     if pol == "capacity_factor":
         assert float(jnp.max(jnp.abs(
@@ -98,6 +98,42 @@ for pol in ("capacity_factor", "dynamic"):
             p, x, dcfg, token_layout="replicated"))(params, x)
     np.testing.assert_allclose(np.asarray(y_r), np.asarray(y_ref),
                                rtol=2e-4, atol=2e-4)
+print("OK")
+""")
+
+
+def test_ep_gathers_compressed_bytes_for_every_scheme():
+    """Quantized expert params flow through BOTH EP layouts for every
+    registered scheme (not just int8): the shard_map partition specs are
+    built per leaf, so a QuantTensor's compressed payload + scales shard
+    over the EP axis and each rank dequantizes only its own experts'
+    blocks.  Output must match the single-device quantized run exactly."""
+    run_sub("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import apply_moe, dispatch_config, init_moe_params
+from repro.core.distributed import apply_moe_ep
+from repro.configs.base import MoEConfig
+from repro.launch.mesh import make_debug_mesh
+from repro.compat import set_mesh, shard_map
+from repro.quantization import quantize_moe_params
+
+mesh = make_debug_mesh(data=2, model=4)
+moe = MoEConfig(n_experts=8, top_k=2, d_ff_expert=32, block_m=8)
+params = init_moe_params(jax.random.key(0), moe, 16)
+x = jax.random.normal(jax.random.key(1), (4, 32, 16))
+for sch in ("int8_expert", "int8_channel", "int4_packed"):
+    qp = quantize_moe_params(params, sch)
+    dcfg = dispatch_config(moe, executor="xla")
+    y_ref, _ = apply_moe(qp, x, dcfg)
+    with set_mesh(mesh):
+        y_sh, _ = jax.jit(lambda p, x: apply_moe_ep(
+            p, x, dcfg, capacity_factor=8.0))(qp, x)
+        y_r, _ = jax.jit(lambda p, x: apply_moe_ep(
+            p, x, dcfg, token_layout="replicated"))(qp, x)
+    np.testing.assert_allclose(np.asarray(y_sh), np.asarray(y_ref),
+                               rtol=1e-6, atol=1e-6, err_msg=sch)
+    np.testing.assert_allclose(np.asarray(y_r), np.asarray(y_ref),
+                               rtol=1e-6, atol=1e-6, err_msg=sch)
 print("OK")
 """)
 

@@ -177,12 +177,15 @@ def test_moe_stats_flow_through_model_scan():
 
 
 def test_deprecated_impl_alias():
-    """Pre-registry call sites keep working: cfg.impl mirrors cfg.executor
-    and dispatch_config accepts impl=."""
+    """Pre-registry call sites keep working — but now under a
+    DeprecationWarning: cfg.impl mirrors cfg.executor and dispatch_config
+    accepts impl= (asserted warnings, ISSUE 4 satellite)."""
     from repro.configs.base import MoEConfig
     from repro.core.moe_layer import dispatch_config
     cfg = MoEDispatchConfig(n_experts=E, top_k=K, block_m=M,
                             executor="pallas")
-    assert cfg.impl == "pallas"
+    with pytest.warns(DeprecationWarning, match="impl is deprecated"):
+        assert cfg.impl == "pallas"
     moe = MoEConfig(n_experts=E, top_k=K, d_ff_expert=F, block_m=M)
-    assert dispatch_config(moe, impl="dense").executor == "dense"
+    with pytest.warns(DeprecationWarning, match=r"impl=.*deprecated"):
+        assert dispatch_config(moe, impl="dense").executor == "dense"

@@ -1,8 +1,9 @@
-"""int8 weight-only expert quantization (serving path, §Perf cell 3)."""
+"""Back-compat coverage for the core/quant.py shim (serving path, §Perf
+cell 3): the pre-registry entry points keep working on top of the unified
+quantization API (repro.quantization, DESIGN.md §8)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.base import MoEConfig
 from repro.core import apply_moe, dispatch_config, init_moe_params
@@ -23,7 +24,7 @@ def test_quantize_roundtrip_error_bound():
 def test_quant_tensor_indexing_matches_dequant():
     w = jax.random.normal(jax.random.key(1), (8, 4, 6))
     q, s = quantize_expert(w)
-    qt = QuantTensor(q, s, jnp.float32)
+    qt = QuantTensor(q, s, jnp.float32, "int8_expert")
     np.testing.assert_allclose(np.asarray(qt[3]),
                                np.asarray(q[3].astype(jnp.float32) * s[3]))
     assert qt.shape == (8, 4, 6)
@@ -38,7 +39,7 @@ def test_quantized_moe_layer_close_to_fp():
         shared=params["shared"])
     assert is_quantized(qparams)
     x = jax.random.normal(jax.random.key(1), (4, 32, 16))
-    cfg = dispatch_config(moe, impl="xla")
+    cfg = dispatch_config(moe, executor="xla")
     y, _ = apply_moe(params, x, cfg)
     yq, _ = apply_moe(qparams, x, cfg)
     rel = float(jnp.max(jnp.abs(y - yq))) / float(jnp.max(jnp.abs(y)))
@@ -52,10 +53,12 @@ def test_quantize_full_model_tree():
     params = jax.eval_shape(lambda k: quantize_params_tree(
         init_params(cfg, k)), jax.random.key(0))
     body_moe = params["body"]["b0"]["moe"]
-    assert "w_gate_q" in body_moe and body_moe["w_gate_q"].dtype == jnp.int8
-    assert "w_gate" not in body_moe
+    # default scheme is int8_expert — the original layout, now scheme-tagged
+    qt = body_moe["w_gate"]
+    assert isinstance(qt, QuantTensor) and qt.scheme == "int8_expert"
+    assert qt.q.dtype == jnp.int8
     # stacked group axis preserved
-    assert body_moe["w_gate_q"].ndim == 4
+    assert qt.q.ndim == 4
 
 
 def test_effective_weights_passthrough_for_fp():

@@ -1,0 +1,395 @@
+"""Unified quantization API (ISSUE 4): scheme registry, pytree QuantTensor,
+executor dequant contract, serving parity, checkpoint round-trip,
+deprecation shims.
+
+Acceptance matrix: every registered scheme x executor {xla, pallas} x
+policy {fixed, dynamic} on the paper MoE configs stays inside the
+scheme's DECLARED relative-error bound vs the fp32 dense oracle; the
+``none`` scheme is bitwise-identical to the unquantized path; and the
+pre-existing int8 serving path is reproduced exactly by ``int8_expert``
+(greedy-token parity through ServeEngine).
+"""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MoEConfig
+from repro.configs.paper import PAPER_CONFIGS
+from repro.core import apply_moe, dispatch_config, init_moe_params
+from repro.execution import available_executors, get_executor
+from repro.quantization import (QuantTensor, available_schemes,
+                                expert_weights, get_scheme, is_quantized,
+                                params_scheme, quantize_moe_params,
+                                quantize_params_tree, resolve_quant_cli)
+from repro.quantization.schemes import pack_int4, unpack_int4
+
+QUANT_SCHEMES = [s for s in available_schemes() if s != "none"]
+
+
+def shrunk_paper_moe(name: str) -> MoEConfig:
+    """A paper Table-1 config shrunk to CPU size, preserving its routing
+    structure (gating flavor, top_k, expert-count ordering)."""
+    p = PAPER_CONFIGS[name]
+    return MoEConfig(n_experts=min(p.n_experts, 16),
+                     top_k=min(p.top_k, 4), d_ff_expert=32,
+                     gating=p.gating, block_m=8)
+
+
+def make_quant_layer(moe: MoEConfig, scheme: str, d_model: int = 16,
+                     seed: int = 0):
+    params = init_moe_params(jax.random.key(seed), moe, d_model)
+    x = jax.random.normal(jax.random.key(seed + 1), (2, 32, d_model))
+    qp = quantize_moe_params(params, scheme) if scheme != "none" else params
+    return params, qp, x
+
+
+# ----------------------------------------------------------------------
+# Registry
+# ----------------------------------------------------------------------
+def test_registry_contents():
+    assert available_schemes() == ["int4_packed", "int8_channel",
+                                   "int8_expert", "none"]
+    with pytest.raises(ValueError, match=r"unknown quant scheme 'fp8'"):
+        get_scheme("fp8")
+    # declared contracts are ordered the way the layouts imply
+    assert get_scheme("int8_channel").rel_error_bound \
+        <= get_scheme("int8_expert").rel_error_bound \
+        < get_scheme("int4_packed").rel_error_bound
+    assert get_scheme("int4_packed").bits == 4
+    assert get_scheme("none").kernel_format == "dense"
+
+
+def test_int4_pack_unpack_roundtrip():
+    rng = np.random.default_rng(0)
+    q4 = jnp.asarray(rng.integers(-7, 8, size=(3, 5, 10, 7)))
+    packed = pack_int4(q4)
+    assert packed.shape == (3, 5, 5, 7) and packed.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(unpack_int4(packed)),
+                                  np.asarray(q4))
+
+
+@pytest.mark.parametrize("scheme", QUANT_SCHEMES)
+def test_scheme_lifecycle(scheme):
+    """quantize -> logical shape preserved, per-block dequant == full
+    materialization, stored payload strictly smaller than dense fp32."""
+    w = jax.random.normal(jax.random.key(0), (8, 16, 24)) * 0.3
+    qt = get_scheme(scheme).quantize(w)
+    assert isinstance(qt, QuantTensor)
+    assert qt.scheme == scheme and qt.shape == (8, 16, 24)
+    full = qt.materialize()
+    assert full.shape == (8, 16, 24)
+    np.testing.assert_array_equal(np.asarray(qt[5]), np.asarray(full[5]))
+    assert qt.nbytes < w.size * 4
+    # weight-level error within the quantization step everywhere
+    err = jnp.max(jnp.abs(full - w) / jnp.maximum(qt.s, 1e-12))
+    assert float(err) <= 0.51, float(err)
+
+
+def test_quantize_params_tree_stacked_group_axis():
+    from repro.configs import get_config, reduced
+    from repro.models import init_params
+    cfg = reduced(get_config("moonshot-v1-16b-a3b"))
+    for scheme in ("int8_expert", "int4_packed"):
+        params = jax.eval_shape(lambda k: quantize_params_tree(
+            init_params(cfg, k), scheme), jax.random.key(0))
+        moe = params["body"]["b0"]["moe"]
+        qt = moe["w_gate"]
+        assert isinstance(qt, QuantTensor) and qt.scheme == scheme
+        assert qt.q.ndim == 4 and qt.q.dtype == jnp.int8   # (G, E, K, N)
+        assert params_scheme(moe) == scheme
+        assert moe["router"].dtype == jnp.float32          # untouched
+    # 'none' is the identity
+    p = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.key(0))
+    assert quantize_params_tree(p, "none") is p
+
+
+def test_requantize_guard():
+    moe = MoEConfig(n_experts=4, top_k=1, d_ff_expert=8, block_m=8)
+    params = init_moe_params(jax.random.key(0), moe, 8)
+    qp = quantize_moe_params(params, "int8_expert")
+    assert quantize_moe_params(qp, "int8_expert")["w_gate"] is qp["w_gate"]
+    with pytest.raises(ValueError, match="already quantized"):
+        quantize_moe_params(qp, "int4_packed")
+
+
+# ----------------------------------------------------------------------
+# QuantTensor as a pytree (satellite)
+# ----------------------------------------------------------------------
+def test_quant_tensor_pytree_roundtrip():
+    qt = get_scheme("int8_channel").quantize(
+        jax.random.normal(jax.random.key(0), (4, 8, 6)))
+    leaves, treedef = jax.tree_util.tree_flatten(qt)
+    assert len(leaves) == 2                      # q and s — dtype is NOT a leaf
+    assert leaves[0].dtype == jnp.int8 and leaves[1].dtype == jnp.float32
+    qt2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(qt2, QuantTensor)
+    assert qt2.scheme == qt.scheme and qt2.dtype == qt.dtype
+    np.testing.assert_array_equal(np.asarray(qt2.q), np.asarray(qt.q))
+    # keyed flattening names the leaves (checkpoint/sharding paths)
+    kl, _ = jax.tree_util.tree_flatten_with_path(qt)
+    assert [str(p[0]) for p, _ in kl] == [".q", ".s"]
+
+
+def test_quant_tensor_tree_map_preserves_static_meta():
+    qt = get_scheme("int8_expert").quantize(
+        jax.random.normal(jax.random.key(0), (4, 8, 6)))
+    mapped = jax.tree.map(lambda l: jnp.zeros_like(l), qt)
+    assert isinstance(mapped, QuantTensor)
+    assert mapped.scheme == "int8_expert" and mapped.dtype == qt.dtype
+    assert float(jnp.max(jnp.abs(mapped.q))) == 0.0
+    # meta survives a scan-style leading-axis slice too
+    stacked = get_scheme("int4_packed").quantize(
+        jax.random.normal(jax.random.key(1), (3, 4, 8, 6)))
+    sl = jax.tree.map(lambda l: l[2], stacked)
+    assert sl.scheme == "int4_packed" and sl.shape == (4, 8, 6)
+
+
+def test_quant_tensor_jit_retraces_only_on_scheme_change():
+    traces = []
+
+    @jax.jit
+    def f(qt):
+        traces.append(qt.scheme)
+        return jnp.sum(qt[0])
+
+    w = jax.random.normal(jax.random.key(0), (4, 8, 6))
+    qt = get_scheme("int8_expert").quantize(w)
+    f(qt)
+    f(jax.tree.map(lambda l: l + 1 - 1, qt))     # new payload, same meta
+    assert traces == ["int8_expert"]             # no retrace
+    # same leaves, different static scheme tag -> retrace (int8_channel's
+    # dequant broadcasts the (E,1,1) scales fine)
+    f(QuantTensor(qt.q, qt.s, qt.dtype, "int8_channel"))
+    assert traces == ["int8_expert", "int8_channel"]
+
+
+# ----------------------------------------------------------------------
+# Acceptance: scheme x executor x policy on the paper configs
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("executor", ["xla", "pallas"])
+@pytest.mark.parametrize("paper", sorted(PAPER_CONFIGS))
+def test_scheme_error_bounds_on_paper_configs(paper, executor):
+    """Quantized layer output stays inside the scheme's declared bound of
+    the fp32 dense oracle for every scheme x policy on this config."""
+    moe = shrunk_paper_moe(paper)
+    for scheme in QUANT_SCHEMES:
+        params, qp, x = make_quant_layer(moe, scheme)
+        y_ref, _ = apply_moe(params, x, dispatch_config(moe,
+                                                        executor="dense"))
+        bound = get_scheme(scheme).rel_error_bound
+        for policy in ("fixed", "dynamic"):
+            cfg = dispatch_config(moe, executor=executor,
+                                  schedule_policy=policy)
+            y_q, _ = apply_moe(qp, x, cfg)
+            rel = float(jnp.max(jnp.abs(y_q - y_ref))
+                        / jnp.max(jnp.abs(y_ref)))
+            assert rel <= bound, (scheme, policy, rel, bound)
+
+
+@pytest.mark.parametrize("executor", ["xla", "pallas", "dense"])
+def test_none_scheme_bitwise_identical(executor):
+    """`none` is the identity: quantize_params_tree returns the very same
+    tree, and the capability-contract dispatch path (expert_weights +
+    supports_scheme + prepare_weights) is bitwise-equal to calling the
+    pipeline on the raw arrays directly."""
+    from repro.core.dispatch import moe_ffn
+    moe = shrunk_paper_moe("qwen2-moe-57b")
+    params, _, x = make_quant_layer(moe, "none")
+    assert quantize_params_tree({"blk": params}, "none")["blk"] is params
+    for policy in ("fixed", "dynamic"):
+        cfg = dispatch_config(moe, executor=executor,
+                              schedule_policy=policy)
+        y1, _ = apply_moe(params, x, cfg)
+        y2, _ = moe_ffn(x.reshape(-1, x.shape[-1]), params["router"],
+                        params["w_gate"], params["w_up"], params["w_down"],
+                        cfg)
+        np.testing.assert_array_equal(np.asarray(y1),
+                                      np.asarray(y2.reshape(x.shape)))
+
+
+def test_in_scan_dequant_matches_materialized_bitwise():
+    """The per-block dequant hook (w[be] in the xla scan, in-kernel for
+    pallas) produces the SAME values as materializing the dense stack up
+    front — the contract that makes int8_expert reproduce the
+    pre-redesign serving path exactly."""
+    moe = shrunk_paper_moe("mixtral-8x7b")
+    for scheme in QUANT_SCHEMES:
+        params, qp, x = make_quant_layer(moe, scheme)
+        dense_params = dict(qp)
+        for k in ("w_gate", "w_up", "w_down"):
+            dense_params[k] = qp[k].materialize()
+        for executor in ("xla", "pallas"):
+            cfg = dispatch_config(moe, executor=executor)
+            y_lazy, _ = apply_moe(qp, x, cfg)
+            y_dense, _ = apply_moe(dense_params, x, cfg)
+            np.testing.assert_array_equal(
+                np.asarray(y_lazy), np.asarray(y_dense),
+                err_msg=f"{scheme} on {executor}")
+
+
+def test_executor_capability_contract():
+    for name in available_executors():
+        ex = get_executor(name)
+        for scheme in available_schemes():
+            assert ex.supports_scheme(scheme)
+        assert not ex.supports_scheme("not-a-scheme")
+    # prepare_weights: dense materializes, in-scan backends pass through
+    qt = get_scheme("int8_expert").quantize(
+        jax.random.normal(jax.random.key(0), (4, 8, 6)))
+    w = {"w_gate": qt, "w_up": qt, "w_down": qt}
+    out = get_executor("dense").prepare_weights(w, None)
+    assert not any(isinstance(v, QuantTensor) for v in out.values())
+    for name in ("xla", "pallas"):
+        out = get_executor(name).prepare_weights(w, None)
+        assert all(v is qt for v in out.values())
+
+
+def test_unsupported_scheme_raises(monkeypatch):
+    from repro.execution import base as exbase
+    moe = MoEConfig(n_experts=4, top_k=1, d_ff_expert=8, block_m=8)
+    params, qp, x = make_quant_layer(moe, "int4_packed", d_model=8)
+
+    class NoQuant(exbase.Executor):
+        def supports_scheme(self, scheme):
+            return scheme == "none"
+
+    monkeypatch.setitem(exbase._EXECUTORS, "noquant", NoQuant())
+    cfg = dispatch_config(moe, executor="noquant")
+    with pytest.raises(ValueError, match="does not support quant scheme"):
+        apply_moe(qp, x, cfg)
+    y, _ = apply_moe(params, x, cfg._replace(executor="xla"))  # sanity
+    assert y.shape == x.shape
+
+
+def test_expert_weights_dtype_retarget():
+    moe = MoEConfig(n_experts=4, top_k=1, d_ff_expert=8, block_m=8)
+    params = init_moe_params(jax.random.key(0), moe, 8)
+    eff = expert_weights(params, jnp.float32)
+    assert eff["w_gate"] is params["w_gate"]         # dense passthrough
+    qp = quantize_moe_params(params, "int8_expert")
+    assert is_quantized(qp) and not is_quantized(params)
+    eff = expert_weights(qp, jnp.bfloat16)
+    assert eff["w_gate"].dtype == np.dtype(jnp.bfloat16)
+    assert eff["w_gate"][0].dtype == jnp.bfloat16
+
+
+# ----------------------------------------------------------------------
+# Serving parity (acceptance) + engine integration
+# ----------------------------------------------------------------------
+def _greedy_tokens(cfg, params, rc, prompt, n_new):
+    from repro.serve.engine import Request, ServeEngine
+    req = Request(rid=0, prompt=prompt, max_new=n_new)
+    ServeEngine(cfg, params, slots=2, capacity=32, rc=rc).run([req])
+    return req.out
+
+
+def test_int8_expert_reproduces_preexisting_serving_path():
+    """The pre-redesign int8 serving path = quantize at load (same scale
+    formula) + dequantized expert blocks in the dispatch scans.  Greedy
+    tokens through ServeEngine under int8_expert must match a run on the
+    materialized-dequant params exactly, and rc.quant='none' must match
+    the unquantized params exactly."""
+    from repro.configs import get_config, reduced
+    from repro.models import RunConfig, init_params
+    cfg = reduced(get_config("moonshot-v1-16b-a3b"), layers=2, d_model=64,
+                  vocab=256)
+    params = init_params(cfg, jax.random.key(0))
+    prompt = np.asarray([3, 7, 11, 2, 9], np.int32)
+    rc = RunConfig(q_chunk=16, kv_chunk=16)
+
+    qp = quantize_params_tree(params, "int8_expert")
+    dense_deq = jax.tree.map(
+        lambda n: n.materialize() if isinstance(n, QuantTensor) else n,
+        qp, is_leaf=lambda n: isinstance(n, QuantTensor))
+
+    toks_q = _greedy_tokens(cfg, params, rc._replace(quant="int8_expert"),
+                            prompt, 6)
+    toks_deq = _greedy_tokens(cfg, dense_deq, rc, prompt, 6)
+    assert toks_q == toks_deq
+    # none == unquantized, bitwise all the way to tokens
+    toks_none = _greedy_tokens(cfg, params, rc._replace(quant="none"),
+                               prompt, 6)
+    toks_raw = _greedy_tokens(cfg, params, rc, prompt, 6)
+    assert toks_none == toks_raw
+
+
+def test_engine_quantizes_from_runconfig():
+    from repro.configs import get_config, reduced
+    from repro.models import RunConfig, init_params
+    from repro.serve.engine import ServeEngine
+    cfg = reduced(get_config("moonshot-v1-16b-a3b"), layers=2, d_model=32)
+    params = init_params(cfg, jax.random.key(0))
+    eng = ServeEngine(cfg, params, slots=1, capacity=16,
+                      rc=RunConfig(q_chunk=16, kv_chunk=16,
+                                   quant="int4_packed"))
+    moe = eng.params["body"]["b0"]["moe"]
+    assert params_scheme(moe) == "int4_packed"
+    # idempotent: already-tagged params admitted unchanged
+    eng2 = ServeEngine(cfg, eng.params, slots=1, capacity=16, rc=eng.rc)
+    assert eng2.params["body"]["b0"]["moe"]["w_gate"] is moe["w_gate"]
+
+
+# ----------------------------------------------------------------------
+# Checkpoint round-trip (tentpole: manager handles quantized trees)
+# ----------------------------------------------------------------------
+def test_checkpoint_roundtrip_quantized_tree(tmp_path):
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.configs import get_config, reduced
+    from repro.models import init_params
+    cfg = reduced(get_config("moonshot-v1-16b-a3b"), layers=2, d_model=32)
+    params = quantize_params_tree(init_params(cfg, jax.random.key(0)),
+                                  "int4_packed")
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(3, {"params": params})
+    target = jax.eval_shape(lambda: {"params": params})
+    restored = mgr.restore(target)["params"]
+    moe = restored["body"]["b0"]["moe"]
+    qt = moe["w_gate"]
+    assert isinstance(qt, QuantTensor) and qt.scheme == "int4_packed"
+    assert qt.q.dtype == jnp.int8                 # compressed on disk too
+    flat_a = jax.tree_util.tree_leaves(params)
+    flat_b = jax.tree_util.tree_leaves(restored)
+    for a, b in zip(flat_a, flat_b):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # quantized checkpoint into a dense target: structure error, loudly
+    dense_target = jax.eval_shape(
+        lambda: {"params": init_params(cfg, jax.random.key(0))})
+    with pytest.raises(ValueError, match="STRUCTURES differ"):
+        mgr.restore(dense_target)
+
+
+# ----------------------------------------------------------------------
+# Deprecation coverage (satellite)
+# ----------------------------------------------------------------------
+def test_quant_experts_flag_deprecated():
+    with pytest.warns(DeprecationWarning, match="--quant-experts"):
+        assert resolve_quant_cli(None, True) == "int8_expert"
+    with pytest.warns(DeprecationWarning):
+        # explicit scheme wins over the legacy on/off flag
+        assert resolve_quant_cli("int4_packed", True) == "int4_packed"
+    with pytest.warns(DeprecationWarning):
+        # ... including an EXPLICIT "none" (only an unset --quant maps)
+        assert resolve_quant_cli("none", True) == "none"
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert resolve_quant_cli(None, False) == "none"
+        assert resolve_quant_cli("int8_channel", False) == "int8_channel"
+    with pytest.raises(ValueError, match="unknown quant scheme"):
+        resolve_quant_cli("int7", False)
+
+
+def test_dispatch_impl_alias_deprecated():
+    from repro.core.dispatch import MoEDispatchConfig
+    cfg = MoEDispatchConfig(n_experts=4, top_k=1, executor="pallas")
+    with pytest.warns(DeprecationWarning, match="impl is deprecated"):
+        assert cfg.impl == "pallas"
+    moe = MoEConfig(n_experts=4, top_k=1, d_ff_expert=8, block_m=8)
+    with pytest.warns(DeprecationWarning, match=r"impl=.*deprecated"):
+        assert dispatch_config(moe, impl="dense").executor == "dense"
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert dispatch_config(moe, executor="xla").executor == "xla"
