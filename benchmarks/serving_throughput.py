@@ -1,5 +1,7 @@
 """Decode throughput of the batched serving engine: active-slot count x
-schedule policy.
+schedule policy, plus a mixed prefill/decode shared-prefix workload
+comparing the paged cache (prefix caching + chunked prefill, DESIGN.md §9)
+against the contiguous pre-paging engine.
 
 The paper's throughput claim is that MoE wins come from batching tokens
 into one fused dispatch; at serve time the decode batch IS the set of
@@ -42,10 +44,12 @@ PROMPT_LEN = 6
 
 
 def run_cell(cfg, params, *, slots: int, policy: str, executor: str,
-             steps: int, capacity: int, quant: str = "none") -> dict:
+             steps: int, capacity: int, quant: str = "none",
+             kv_block_size=None) -> dict:
     rc = RunConfig(q_chunk=64, kv_chunk=64, executor=executor,
                    schedule_policy=policy, quant=quant, moe_stats=False)
-    eng = ServeEngine(cfg, params, slots=slots, capacity=capacity, rc=rc)
+    eng = ServeEngine(cfg, params, slots=slots, capacity=capacity, rc=rc,
+                      kv_block_size=kv_block_size)
     rng = np.random.default_rng(0)
     for i in range(slots):
         eng.admit(Request(rid=i,
@@ -66,7 +70,121 @@ def run_cell(cfg, params, *, slots: int, policy: str, executor: str,
          f"tok_per_s={tok_per_s:.1f}")
     return {"slots": slots, "policy": policy, "executor": executor,
             "quant": quant, "steps": steps, "s_per_step": s_per_step,
-            "tok_per_s": tok_per_s}
+            "tok_per_s": tok_per_s, "kv_block": eng.kv_block_size}
+
+
+# ----------------------------------------------------------------------
+# Mixed prefill/decode + shared-prefix workload (paged-cache acceptance)
+# ----------------------------------------------------------------------
+def run_workload_cell(cfg, params, *, mode: str, executor: str, slots: int,
+                      capacity: int, n_req: int, prefix_len: int,
+                      suffix_len: int, max_new: int, prefill_chunk: int,
+                      kv_block: int) -> dict:
+    """One RESIDENT request decodes throughout while ``n_req`` shared-
+    prefix requests stream through the remaining slots.  Counts, besides
+    wall time, the DETERMINISTIC costs: engine forwards (steps + the
+    contiguous engine's admission prefills — each is one jit call, i.e.
+    one DispatchPlan per MoE layer), prompt tokens that actually entered
+    dispatch plans (prefix-cache hits never do), and the resident's decode
+    tokens per forward — the "prefill stalls decoding" lever: a contiguous
+    admission prefill is a forward in which the resident produces nothing,
+    while a prefill chunk rides the resident's own decode plan.
+
+    modes: ``paged`` (prefix cache + chunked prefill), ``paged_noprefix``
+    (chunked prefill only), ``contiguous`` (pre-paging engine)."""
+    rc = RunConfig(q_chunk=64, kv_chunk=64, executor=executor,
+                   schedule_policy="dynamic", moe_stats=bool(cfg.is_moe))
+    kw = {"paged": dict(kv_block_size=kv_block, prefix_cache=True,
+                        prefill_chunk=prefill_chunk),
+          "paged_noprefix": dict(kv_block_size=kv_block, prefix_cache=False,
+                                 prefill_chunk=prefill_chunk),
+          "contiguous": dict(kv_block_size=0)}[mode]
+    eng = ServeEngine(cfg, params, slots=slots, capacity=capacity, rc=rc,
+                      **kw)
+    rng = np.random.default_rng(0)
+    resident = Request(rid=10 ** 6,
+                       prompt=rng.integers(0, cfg.vocab_size,
+                                           4).astype(np.int32),
+                       max_new=10 ** 9)           # never retires in-window
+    prefix = rng.integers(0, cfg.vocab_size, prefix_len).astype(np.int32)
+    reqs = [Request(rid=i,
+                    prompt=np.concatenate(
+                        [prefix, rng.integers(0, cfg.vocab_size, suffix_len)
+                         ]).astype(np.int32),
+                    max_new=max_new)
+            for i in range(n_req)]
+    eng.admit(resident)
+    res_base = len(resident.out)
+    pending = list(reqs)
+    steps = admits = 0
+    t0 = time.perf_counter()
+    while not all(r.done for r in reqs):
+        while pending and eng.n_active < eng.slots:
+            eng.admit(pending.pop(0))
+            admits += 1
+        assert eng.step() > 0
+        steps += 1
+    dt = time.perf_counter() - t0
+    decode_tokens = sum(len(r.out) for r in reqs)
+    # contiguous admission runs a whole-prompt prefill forward per request;
+    # paged admission runs none (chunks ride inside the counted steps)
+    forwards = steps + (admits if not eng.paged else 0)
+    resident_tokens = len(resident.out) - res_base
+    hit = sum(r.stats.get("serve/prefix_hit_tokens", 0.0) for r in reqs)
+    dispatched = sum(len(r.prompt) for r in reqs) - hit
+    rec = {"mode": mode, "slots": slots, "n_req": n_req,
+           "prefix_len": prefix_len, "suffix_len": suffix_len,
+           "max_new": max_new, "prefill_chunk": prefill_chunk,
+           "kv_block": (kv_block if mode != "contiguous" else 0),
+           "decode_tokens": decode_tokens, "forwards": forwards,
+           "prefill_dispatch_tokens": dispatched,
+           "prefix_hit_tokens": hit,
+           "resident_tokens": resident_tokens,
+           "decode_tok_per_forward": resident_tokens / forwards,
+           "wall_s": dt,
+           "tok_per_s": (decode_tokens + resident_tokens) / dt,
+           "outputs": {r.rid: r.out for r in reqs}}
+    emit(f"workload_{mode}", dt / max(forwards, 1),
+         f"resident_tok_per_fwd={rec['decode_tok_per_forward']:.2f}")
+    return rec
+
+
+def run_shared_prefix_sweep(cfg, params, *, executor: str, smoke: bool):
+    dims = dict(slots=2, capacity=128 if smoke else 256,
+                n_req=4 if smoke else 8,
+                prefix_len=24 if smoke else 48, suffix_len=4,
+                max_new=6 if smoke else 16, prefill_chunk=8, kv_block=8)
+    cells = {m: run_workload_cell(cfg, params, mode=m, executor=executor,
+                                  **dims)
+             for m in ("paged", "paged_noprefix", "contiguous")}
+    paged, noprefix, contig = (cells["paged"], cells["paged_noprefix"],
+                               cells["contiguous"])
+    # tokens must be identical across cache layouts — else the speedups
+    # below are measuring a correctness bug
+    assert paged["outputs"] == noprefix["outputs"] == contig["outputs"]
+    # prefix hits: later requests' shared blocks never enter a plan —
+    # fewer prefill dispatch tokens AND fewer engine forwards
+    assert paged["prefill_dispatch_tokens"] \
+        < noprefix["prefill_dispatch_tokens"], cells
+    assert paged["forwards"] < noprefix["forwards"], cells
+    # the stream's first admission computes the prefix; every later one
+    # must hit the full registered run
+    full_prefix = (dims["prefix_len"] // dims["kv_block"]) * dims["kv_block"]
+    assert paged["prefix_hit_tokens"] \
+        >= (dims["n_req"] - 1) * full_prefix, cells
+    # chunked prefill: the resident slot decodes in EVERY forward (chunks
+    # ride its plan), while the contiguous engine stalls it one forward
+    # per admission prefill — strictly higher decode tok/forward
+    assert paged["decode_tok_per_forward"] \
+        > contig["decode_tok_per_forward"], cells
+    for c in cells.values():
+        c.pop("outputs")
+    print(f"# shared-prefix workload: prefill tokens dispatched "
+          f"{contig['prefill_dispatch_tokens']:.0f} (contiguous) -> "
+          f"{paged['prefill_dispatch_tokens']:.0f} (prefix cache); "
+          f"decode tok/forward {contig['decode_tok_per_forward']:.2f} -> "
+          f"{paged['decode_tok_per_forward']:.2f} (chunked prefill)")
+    return list(cells.values())
 
 
 def main():
@@ -85,6 +203,9 @@ def main():
                          "(repro.quantization registry)")
     ap.add_argument("--steps", type=int, default=32)
     ap.add_argument("--capacity", type=int, default=128)
+    ap.add_argument("--kv-block-size", type=int, default=None,
+                    help="paged cache block size for the decode sweep "
+                         "(0 = contiguous; default auto)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sweep for CI: slots 1,2 / 4 steps")
     ap.add_argument("--out", default="results/serve",
@@ -119,14 +240,27 @@ def main():
             records.append(run_cell(cfg, params, slots=slots, policy=policy,
                                     executor=args.executor, steps=steps,
                                     capacity=args.capacity,
-                                    quant=args.quant))
+                                    quant=args.quant,
+                                    kv_block_size=args.kv_block_size))
+
+    from repro.serve.kv_cache import paged_supported
+    if paged_supported(cfg):
+        shared_prefix = run_shared_prefix_sweep(cfg, params,
+                                                executor=args.executor,
+                                                smoke=args.smoke)
+    else:
+        shared_prefix = []
+        print(f"# shared-prefix workload skipped: {args.arch} has "
+              f"non-pageable caches (contiguous engine only)")
 
     out_dir = pathlib.Path(args.out)
     out_dir.mkdir(parents=True, exist_ok=True)
     suffix = "_smoke" if args.smoke else ""
     out_path = out_dir / f"{args.arch}{suffix}.json"
     out_path.write_text(json.dumps({"arch": args.arch, "reduced": True,
-                                    "records": records}, indent=1))
+                                    "records": records,
+                                    "shared_prefix": shared_prefix},
+                                   indent=1))
     print(f"# wrote {out_path}")
 
     for policy in args.policies.split(","):

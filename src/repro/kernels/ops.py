@@ -49,6 +49,12 @@ def _weight_operands(w):
     (E, N) f32 channel scales, scheme kernel_format, logical (K, N)).
     """
     if isinstance(w, QuantTensor):
+        if w.meta:
+            # padded layouts (int4 odd-K) have no in-kernel dequant path:
+            # fall back to the dense operand (edge case; the paper
+            # configs' K are all even)
+            w = w.materialize()
+            return w, None, "dense", tuple(w.shape[-2:])
         sch = get_scheme(w.scheme)
         K, N = w.shape[-2:]
         return w.q, sch.channel_scales(w), sch.kernel_format, (K, N)

@@ -27,6 +27,21 @@ def main():
                          "active slots decode together in one jitted step")
     ap.add_argument("--capacity", type=int, default=128,
                     help="per-slot KV cache capacity (tokens)")
+    ap.add_argument("--kv-block-size", type=int, default=None,
+                    help="paged KV cache block size in tokens (DESIGN.md "
+                         "§9); 0 forces the contiguous pre-paging cache; "
+                         "default: auto (paged wherever the architecture's "
+                         "caches are positional KV)")
+    ap.add_argument("--prefix-cache", dest="prefix_cache",
+                    action="store_true", default=True,
+                    help="content-hash full prompt blocks and share them "
+                         "across requests (paged mode; default on)")
+    ap.add_argument("--no-prefix-cache", dest="prefix_cache",
+                    action="store_false")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="chunked prefill: prompt tokens fed per step into "
+                         "the decode step's shared dispatch plan (paged "
+                         "mode; prefill never stalls decoding slots)")
     ap.add_argument("--max-steps", type=int, default=512,
                     help="decode-step budget for the whole run; requests "
                          "still in flight when it runs out are reported "
@@ -45,7 +60,7 @@ def main():
     ap.add_argument("--admission", default="fcfs",
                     choices=available_admission_policies(),
                     help="which pending request gets a freed slot "
-                         "(fcfs = submission order, sjf = shortest prompt)")
+                         "(fcfs, sjf = shortest prompt, prefix_hit = warmest cached prefix)")
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
 
@@ -76,11 +91,22 @@ def main():
 
     engine = ServeEngine(cfg, params, slots=args.slots,
                          capacity=args.capacity, admission=args.admission,
+                         kv_block_size=args.kv_block_size,
+                         prefix_cache=args.prefix_cache,
+                         prefill_chunk=args.prefill_chunk,
                          rc=RunConfig(q_chunk=64, kv_chunk=64,
                                       executor=args.executor,
                                       schedule_policy=args.schedule_policy,
                                       quant=quant if cfg.is_moe else "none",
                                       moe_stats=bool(cfg.is_moe)))
+    if engine.paged:
+        print(f"paged KV cache: {engine.kv.n_blocks} blocks x "
+              f"{engine.kv.block_size} tokens, prefix cache "
+              f"{'on' if engine.kv.prefix_cache else 'off'}, "
+              f"prefill chunk {engine.prefill_chunk}")
+    else:
+        print("contiguous KV cache (non-pageable family or "
+              "--kv-block-size 0)")
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab_size,
@@ -99,6 +125,8 @@ def main():
                       f"{int(r.stats.get('serve/decode_batch', 1))} slot(s), "
                       f"summed over moe layers): {sched}")
     print(f"{len(done)}/{len(reqs)} requests completed")
+    if engine.paged:
+        print(f"paged-cache stats: {engine.kv.stats()}")
     if engine.dropped:
         print(f"WARNING: {len(engine.dropped)} request(s) dropped by the "
               f"--max-steps={args.max_steps} budget "

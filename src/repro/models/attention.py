@@ -215,6 +215,7 @@ def attention_block(p, x: jnp.ndarray, *, n_heads: int, n_kv_heads: int,
                     kv_positions: Optional[jnp.ndarray] = None,
                     cache: Optional[dict] = None,
                     cache_pos: Optional[jnp.ndarray] = None,
+                    block_tables: Optional[jnp.ndarray] = None,
                     q_chunk: int = 512, kv_chunk: int = 512):
     """Full attention sub-block: project -> rope -> (cache update) -> flash
     -> output projection.  Returns (out, new_cache).
@@ -222,7 +223,10 @@ def attention_block(p, x: jnp.ndarray, *, n_heads: int, n_kv_heads: int,
     Decode: ``cache_pos`` is a scalar (all rows write/attend at the same
     position) or a (B,) vector — the batched-serving path, where each cache
     row carries its own sequence position (``scatter_decode_row`` + per-row
-    ``kv_limit`` mask)."""
+    ``kv_limit`` mask).  With ``block_tables`` (B, nb) the cache is a paged
+    block POOL instead of per-row buffers: writes scatter block-granular
+    (``scatter_block_rows``) and reads gather each row's logical view
+    through its table (``gather_block_kv``) — same math, paged storage."""
     from repro.distributed.ctx import constrain
     source_kv = x if xkv is None else xkv
     q, k, v = project_qkv(p, x, source_kv, n_heads, n_kv_heads, head_dim)
@@ -240,10 +244,17 @@ def attention_block(p, x: jnp.ndarray, *, n_heads: int, n_kv_heads: int,
     if cache is not None:
         # decode: write this step's k/v at cache_pos, attend to <= cache_pos
         idx = cache_pos
-        new_k = scatter_decode_row(cache["k"], k, idx)
-        new_v = scatter_decode_row(cache["v"], v, idx)
-        new_cache = {"k": new_k, "v": new_v}
-        k, v = new_k.astype(q.dtype), new_v.astype(q.dtype)
+        if block_tables is not None:
+            new_k = scatter_block_rows(cache["k"], k, block_tables, idx)
+            new_v = scatter_block_rows(cache["v"], v, block_tables, idx)
+            new_cache = {"k": new_k, "v": new_v}
+            k = gather_block_kv(new_k, block_tables).astype(q.dtype)
+            v = gather_block_kv(new_v, block_tables).astype(q.dtype)
+        else:
+            new_k = scatter_decode_row(cache["k"], k, idx)
+            new_v = scatter_decode_row(cache["v"], v, idx)
+            new_cache = {"k": new_k, "v": new_v}
+            k, v = new_k.astype(q.dtype), new_v.astype(q.dtype)
         kv_limit = idx
         causal = False
     out = flash_attention(q, k, v, causal=causal, window=window,
@@ -253,6 +264,50 @@ def attention_block(p, x: jnp.ndarray, *, n_heads: int, n_kv_heads: int,
     B, S = x.shape[:2]
     out = out.reshape(B, S, -1)
     return jnp.dot(out, p["wo"].astype(x.dtype)), new_cache
+
+
+def gather_block_kv(pool: jnp.ndarray, tables: jnp.ndarray) -> jnp.ndarray:
+    """Paged attention READ: reassemble each row's logically-contiguous
+    KV view from the global block pool.
+
+    pool: (n_blocks, block_size, ...); tables: (B, nb) int32 physical block
+    ids in logical order.  Returns (B, nb * block_size, ...) — row b's view
+    holds its sequence positions in order, so downstream flash attention
+    (kv_limit masking, rope'd keys, windows) is unchanged: paging is
+    invisible past the gather.  Unallocated table entries may point at
+    arbitrary blocks; their logical positions lie beyond the row's
+    ``kv_limit`` and are masked."""
+    g = pool[tables]                        # (B, nb, bs, ...)
+    return g.reshape(g.shape[0], g.shape[1] * g.shape[2], *g.shape[3:])
+
+
+def scatter_block_rows(pool: jnp.ndarray, val: jnp.ndarray,
+                       tables: jnp.ndarray, pos) -> jnp.ndarray:
+    """Paged attention WRITE: the block-granular sibling of
+    ``scatter_decode_row``.
+
+    pool: (n_blocks, block_size, ...); val: (B, 1, ...); tables: (B, nb);
+    pos: (B,) logical positions.  Token b lands at physical
+    ``(tables[b, pos[b] // block_size], pos[b] % block_size)``.  Rank-
+    agnostic (attention K/V and the MLA latent cache share it).  The
+    engine guarantees the (block, offset) pairs of one step are pairwise
+    distinct: decode tokens occupy different slots and a prefill chunk's
+    tokens occupy consecutive positions of one slot — so the point
+    scatter's unordered updates never collide.  A position past the
+    row's table (nb * block_size) is DROPPED, matching the contiguous
+    cache's out-of-bounds scatter at the capacity edge (the engine
+    retires such rows on the same step)."""
+    bs = pool.shape[1]
+    nb = tables.shape[1]
+    pos = jnp.asarray(pos)
+    logical = pos // bs
+    blk = jnp.take_along_axis(tables, jnp.clip(logical, 0, nb - 1)[:, None],
+                              axis=1)[:, 0]
+    # rows past the table get an out-of-range physical id; mode="drop"
+    # discards them (they hold no block to write)
+    blk = jnp.where(logical < nb, blk, pool.shape[0])
+    return pool.at[blk, pos % bs].set(val[:, 0].astype(pool.dtype),
+                                      mode="drop")
 
 
 def scatter_decode_row(cache: jnp.ndarray, val: jnp.ndarray, pos):

@@ -212,11 +212,17 @@ def _apply_moe_ffn(bp, x, cfg: ModelConfig, rc: RunConfig, mode: str):
 
 def apply_block(bp, x, kind: str, cfg: ModelConfig, rc: RunConfig, *,
                 positions, mode: str, cache=None, cache_pos=None,
-                image_embeds=None):
-    """Returns (x, new_cache, aux)."""
+                block_tables=None, image_embeds=None):
+    """Returns (x, new_cache, aux).  ``block_tables`` (B, nb) switches the
+    decode cache access to the paged block pool (serve/kv_cache.py): KV
+    writes scatter block-granular and reads gather per-row logical views —
+    only positional-KV kinds support it (kv_cache.PAGED_KINDS)."""
     aux = {}
     new_cache = None
     dt = x.dtype
+    if block_tables is not None and kind in ("rwkv", "mamba", "cross"):
+        raise ValueError(f"block kind {kind!r} has no positional KV cache "
+                         "to page (see serve/kv_cache.py PAGED_KINDS)")
 
     if kind == "rwkv":
         h = apply_norm(bp["norm1"], x, cfg.norm)
@@ -244,7 +250,7 @@ def apply_block(bp, x, kind: str, cfg: ModelConfig, rc: RunConfig, *,
             positions=positions,
             cache=cache.get("kv") if (cache is not None
                                       and mode == "decode") else None,
-            cache_pos=cache_pos,
+            cache_pos=cache_pos, block_tables=block_tables,
             q_chunk=(10 ** 9 if mode == "decode" else rc.q_chunk or 10 ** 9),
             kv_chunk=(10 ** 9 if mode == "decode"
                       else rc.kv_chunk or 10 ** 9))
@@ -277,7 +283,8 @@ def apply_block(bp, x, kind: str, cfg: ModelConfig, rc: RunConfig, *,
             kw = dict(kw, q_chunk=10 ** 9, kv_chunk=10 ** 9)
             o, kv_cache = attention_block(
                 bp["attn"], h, **kw, positions=positions,
-                cache=cache["kv"], cache_pos=cache_pos)
+                cache=cache["kv"], cache_pos=cache_pos,
+                block_tables=block_tables)
         elif mode == "prefill":
             o, _ = attention_block(bp["attn"], h, **kw, positions=positions)
             kv_cache = _prefill_kv_cache(bp["attn"], h, cfg, cache["kv"],
@@ -456,16 +463,26 @@ def _head_matrix(params, cfg: ModelConfig):
 
 
 def forward(params, cfg: ModelConfig, rc: RunConfig, batch: dict,
-            mode: str = "train", cache=None, pos=None):
+            mode: str = "train", cache=None, pos=None, block_tables=None):
     """Returns (out, new_cache, aux):
     train  -> out = final hidden states (B, S, d)
     prefill-> out = last-position logits (B, V)
     decode -> out = logits (B, V); ``pos`` is a scalar (all rows at the
               same position) or a (B,) vector (per-row positions — the
               batched serving path)
+
+    ``block_tables`` (B, nb) — paged decode over a block-pool cache
+    (serve/kv_cache.py): row b is one TOKEN of the serving step (a decode
+    token or a prefill-chunk token), writing/reading its slot's KV through
+    its block table at its own position.  S must be 1 and ``pos`` a (B,)
+    vector; the cache pytree holds (n_blocks, block_size) pools in place
+    of (slots, capacity) rows.
     """
     from repro.distributed.ctx import constrain
     prefix, body, n_groups, suffix = group_structure(cfg)
+    if block_tables is not None and mode != "decode":
+        raise ValueError("block_tables is decode-only (chunked prefill "
+                         "feeds prompt tokens through decode rows)")
     dt = rc.compute_dtype
     x = constrain("residual", _embed(params, cfg, batch, dt))
     B, S = x.shape[:2]
@@ -497,7 +514,8 @@ def forward(params, cfg: ModelConfig, rc: RunConfig, batch: dict,
             c = caches[i] if caches is not None else None
             x, nc, aux = apply_block(
                 blocks[i], x, kind, cfg, rc, positions=positions, mode=mode,
-                cache=c, cache_pos=cache_pos, image_embeds=image_embeds)
+                cache=c, cache_pos=cache_pos, block_tables=block_tables,
+                image_embeds=image_embeds)
             aux_acc = merge_aux(aux_acc, aux)
             new_caches.append(nc)
         return x, new_caches
@@ -522,7 +540,8 @@ def forward(params, cfg: ModelConfig, rc: RunConfig, batch: dict,
             c = gcache[f"b{i}"] if gcache is not None else None
             x, nc, aux = apply_block(
                 bp, x, kind, cfg, rc, positions=positions, mode=mode,
-                cache=c, cache_pos=cache_pos, image_embeds=image_embeds)
+                cache=c, cache_pos=cache_pos, block_tables=block_tables,
+                image_embeds=image_embeds)
             gaux = {k: gaux.get(k, 0.0) + v for k, v in aux.items()}
             ncache[f"b{i}"] = nc
         from repro.distributed.ctx import constrain as _c

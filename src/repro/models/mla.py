@@ -14,7 +14,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import MLAConfig
-from repro.models.attention import flash_attention, scatter_decode_row
+from repro.models.attention import (flash_attention, gather_block_kv,
+                                    scatter_block_rows, scatter_decode_row)
 from repro.models.blocks import apply_norm, dense_init, init_norm, rope
 
 
@@ -60,8 +61,12 @@ def _latent(p, x, mla: MLAConfig, positions):
 
 def mla_block(p, x: jnp.ndarray, *, n_heads: int, mla: MLAConfig,
               positions: jnp.ndarray, cache: Optional[dict] = None,
-              cache_pos=None, q_chunk: int = 512, kv_chunk: int = 512):
-    """Returns (out, new_cache). Cache: {"ckv": (B,S,r), "kr": (B,S,dr)}."""
+              cache_pos=None, block_tables=None,
+              q_chunk: int = 512, kv_chunk: int = 512):
+    """Returns (out, new_cache). Cache: {"ckv": (B,S,r), "kr": (B,S,dr)};
+    with ``block_tables`` (B, nb) the cache leaves are paged block pools
+    (n_blocks, block_size, ...) written block-granular and read through a
+    per-row gather — the latent cache pages exactly like attention K/V."""
     dn, dr, dv = mla.qk_nope_head_dim, mla.qk_rope_head_dim, mla.v_head_dim
     B, S, _ = x.shape
     q_nope, q_rope = _project_q(p, x, n_heads, mla, positions)
@@ -84,12 +89,20 @@ def mla_block(p, x: jnp.ndarray, *, n_heads: int, mla: MLAConfig,
     # ---- decode: absorbed attention over the compressed cache ----
     # (scatter_decode_row handles scalar and (B,) per-slot positions)
     idx = cache_pos
-    new_ckv = scatter_decode_row(cache["ckv"], c_kv, idx)
-    new_kr = scatter_decode_row(cache["kr"], k_rope, idx)
-    new_cache = {"ckv": new_ckv, "kr": new_kr}
+    if block_tables is not None:
+        new_ckv = scatter_block_rows(cache["ckv"], c_kv, block_tables, idx)
+        new_kr = scatter_block_rows(cache["kr"], k_rope, block_tables, idx)
+        new_cache = {"ckv": new_ckv, "kr": new_kr}
+        ckv_view = gather_block_kv(new_ckv, block_tables)
+        kr_view = gather_block_kv(new_kr, block_tables)
+    else:
+        new_ckv = scatter_decode_row(cache["ckv"], c_kv, idx)
+        new_kr = scatter_decode_row(cache["kr"], k_rope, idx)
+        new_cache = {"ckv": new_ckv, "kr": new_kr}
+        ckv_view, kr_view = new_ckv, new_kr
 
     out = mla_absorbed_decode(
-        p, q_nope, q_rope, new_ckv.astype(x.dtype), new_kr.astype(x.dtype),
+        p, q_nope, q_rope, ckv_view.astype(x.dtype), kr_view.astype(x.dtype),
         n_heads=n_heads, mla=mla, kv_limit=idx, kv_chunk=kv_chunk)
     out = out.reshape(B, S, n_heads * dv)
     return jnp.dot(out, p["wo"].astype(x.dtype)), new_cache

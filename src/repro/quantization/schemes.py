@@ -120,7 +120,15 @@ class Int8ChannelScheme(QuantScheme):
 @register_scheme("int4_packed")
 class Int4PackedScheme(QuantScheme):
     """Per-expert symmetric int4, two nibbles per byte along K — half the
-    gathered bytes of int8 (scale = max|W_e|/7; range [-7, 7])."""
+    gathered bytes of int8 (scale = max|W_e|/7; range [-7, 7]).
+
+    An odd K is stored with one zero pad row (byte packing needs pairs)
+    and tagged ``("pad_k", 1)`` in the QuantTensor's static meta; dequant
+    strips it, so quantize -> dequantize round-trips the exact logical
+    shape.  The Pallas in-kernel dequant path requires the padless layout
+    (kernels/ops.py materializes padded tensors instead — the paper
+    configs all have even K, so this is the edge-case escape hatch, not
+    the hot path)."""
     bits = 4
     rel_error_bound = 0.6
     kernel_format = "int4"
@@ -128,8 +136,13 @@ class Int4PackedScheme(QuantScheme):
     def quantize(self, w):
         s = _absmax(w, axis=(-2, -1)) / 7.0 + 1e-12
         q4 = jnp.clip(jnp.round(w.astype(jnp.float32) / s), -7, 7)
+        pad = w.shape[-2] % 2
+        if pad:
+            q4 = jnp.concatenate(
+                [q4, jnp.zeros((*q4.shape[:-2], 1, q4.shape[-1]),
+                               q4.dtype)], axis=-2)
         return QuantTensor(pack_int4(q4), s.astype(jnp.float32), w.dtype,
-                           self.name)
+                           self.name, (("pad_k", 1),) if pad else ())
 
     def dequantize(self, q, s, dtype):
         return (unpack_int4(q).astype(jnp.float32) * s).astype(dtype)

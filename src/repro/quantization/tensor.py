@@ -35,26 +35,30 @@ import numpy as np
 class QuantTensor:
     """Scheme-tagged compressed weight stack (see module docstring)."""
 
-    __slots__ = ("q", "s", "dtype", "scheme")
+    __slots__ = ("q", "s", "dtype", "scheme", "meta")
 
-    def __init__(self, q, s, dtype, scheme: str):
+    def __init__(self, q, s, dtype, scheme: str, meta: tuple = ()):
         self.q = q
         self.s = s
         # normalize so aux_data hashes/compares stably across spellings
         # (jnp.float32 vs np.dtype('float32') vs "float32")
         self.dtype = np.dtype(dtype)
         self.scheme = scheme
+        # scheme-owned static layout tags as a hashable (key, value)
+        # tuple — e.g. int4_packed's ("pad_k", 1) marks an odd logical K
+        # stored with one zero pad row (stripped on dequant)
+        self.meta = tuple(meta)
 
     # -- pytree protocol ------------------------------------------------
     def tree_flatten_with_keys(self):
         return (((jax.tree_util.GetAttrKey("q"), self.q),
                  (jax.tree_util.GetAttrKey("s"), self.s)),
-                (self.dtype, self.scheme))
+                (self.dtype, self.scheme, self.meta))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         q, s = children
-        return cls(q, s, aux[0], aux[1])
+        return cls(q, s, aux[0], aux[1], aux[2])
 
     # -- dense-stack interface (what the dispatch pipeline consumes) ----
     @property
@@ -63,10 +67,20 @@ class QuantTensor:
         return get_scheme(self.scheme)
 
     @property
+    def _pad_k(self) -> int:
+        return dict(self.meta).get("pad_k", 0)
+
+    def _strip(self, w):
+        """Drop stored pad rows (packed schemes with odd logical K)."""
+        return w[..., :w.shape[-2] - self._pad_k, :] if self._pad_k else w
+
+    @property
     def shape(self):
         """LOGICAL shape of the dense stack this compresses (a packed
-        scheme stores fewer physical elements)."""
-        return self._scheme.logical_shape(self.q.shape)
+        scheme stores fewer physical elements; pad rows excluded)."""
+        shp = list(self._scheme.logical_shape(self.q.shape))
+        shp[-2] -= self._pad_k
+        return tuple(shp)
 
     @property
     def ndim(self) -> int:
@@ -81,22 +95,26 @@ class QuantTensor:
     def __getitem__(self, idx):
         """Gather + dequantize: the per-block hook of the grouped-GEMM
         scans.  ``idx`` may be a traced scalar (a `lax.scan` step's
-        block-expert id) or an index array."""
-        return self._scheme.dequantize(self.q[idx], self.s[idx], self.dtype)
+        block-expert id) or an index array (leading axes only — the
+        trailing (K, N) block stays whole, so pad rows strip cleanly)."""
+        return self._strip(
+            self._scheme.dequantize(self.q[idx], self.s[idx], self.dtype))
 
     def materialize(self):
         """Full dense (E, K, N) stack in the target dtype (what
         schedule-free backends such as the dense oracle consume)."""
-        return self._scheme.dequantize(self.q, self.s, self.dtype)
+        return self._strip(
+            self._scheme.dequantize(self.q, self.s, self.dtype))
 
     def with_dtype(self, dtype) -> "QuantTensor":
         """Same payload, different dequant target (the layer applies the
         model's compute dtype at dispatch time)."""
         if np.dtype(dtype) == self.dtype:
             return self
-        return QuantTensor(self.q, self.s, dtype, self.scheme)
+        return QuantTensor(self.q, self.s, dtype, self.scheme, self.meta)
 
     def __repr__(self):
+        meta = f", meta={self.meta}" if self.meta else ""
         return (f"QuantTensor(scheme={self.scheme!r}, shape={self.shape}, "
                 f"stored={tuple(self.q.shape)}:{self.q.dtype}, "
-                f"dtype={self.dtype})")
+                f"dtype={self.dtype}{meta})")

@@ -1,24 +1,33 @@
 """Admission policies: which pending request gets the next free slot.
 
 Mirrors the schedule-policy registry (repro.scheduling): a policy is a
-function ``(pending: Sequence[Request]) -> int`` returning the index of the
+function ``(pending, *, engine=None) -> int`` returning the index of the
 request to admit, registered under a name the engine/launcher select by
 flag.  Policies see the whole pending queue so they can reorder (e.g.
-shortest-prompt-first reduces head-of-line blocking from long prefills),
-but admission never disturbs running decodes: the engine prefills into a
-free slot row of the batched cache while the other slots' rows are
-untouched.
+shortest-prompt-first reduces head-of-line blocking from long prefills)
+and, since the paged cache, the ENGINE — so a policy can consult serving
+state such as the prefix-cache index.  Admission never disturbs running
+decodes: the engine claims a slot (paged: attaches prefix hits and lets
+the prompt chunk-prefill inside the shared step; contiguous: prefills
+only its slot's cache row).
 
-* ``fcfs``  — first-come-first-served (submission order; the pre-refactor
-              engine's behavior)
-* ``sjf``   — shortest-prompt-first (minimizes time-to-first-token for
-              short requests under prefill contention; FCFS tie-break)
+* ``fcfs``        — first-come-first-served (submission order; the
+                    pre-refactor engine's behavior)
+* ``sjf``         — shortest-prompt-first (minimizes time-to-first-token
+                    for short requests under prefill contention; FCFS
+                    tie-break)
+* ``prefix_hit``  — most-cached-prefix-first (paged engine): prefer the
+                    request whose prompt has the longest run of blocks
+                    already in the prefix-cache index, so warm requests
+                    ride their shared blocks before eviction can claim
+                    them; ties (including every request on a cold cache,
+                    or the contiguous engine) fall back to FCFS.
 """
 from __future__ import annotations
 
 from typing import Callable, Dict, Sequence
 
-AdmissionPolicy = Callable[[Sequence], int]
+AdmissionPolicy = Callable[..., int]
 
 _POLICIES: Dict[str, AdmissionPolicy] = {}
 
@@ -42,10 +51,21 @@ def available_admission_policies():
 
 
 @register_admission("fcfs")
-def fcfs(pending: Sequence) -> int:
+def fcfs(pending: Sequence, *, engine=None) -> int:
     return 0
 
 
 @register_admission("sjf")
-def shortest_prompt_first(pending: Sequence) -> int:
+def shortest_prompt_first(pending: Sequence, *, engine=None) -> int:
     return min(range(len(pending)), key=lambda i: (len(pending[i].prompt), i))
+
+
+@register_admission("prefix_hit")
+def most_cached_prefix_first(pending: Sequence, *, engine=None) -> int:
+    """Longest currently-cached prefix wins; FCFS tie-break.  Falls back
+    to FCFS when no paged prefix index is available."""
+    kv = getattr(engine, "kv", None)
+    if kv is None or not getattr(kv, "prefix_cache", False):
+        return 0
+    return min(range(len(pending)),
+               key=lambda i: (-kv.probe_prefix(pending[i].prompt), i))

@@ -1,27 +1,33 @@
-"""Batched continuous-batching engine: one decode dispatch per step.
+"""Batched continuous-batching engine over a PAGED KV cache.
 
-All active slots decode in ONE jitted forward over a single
-``(slots, capacity)`` KV cache — this is where the paper's throughput
-story meets serving: every MoE layer sees the whole decode batch and
-builds exactly one ``DispatchPlan`` per step covering all active tokens,
-so the schedule policies (repro.scheduling) finally have a real batch to
-schedule at serve time.  Control flow (vLLM-style, scaled to this
-container):
+All active slots decode in ONE jitted forward — this is where the paper's
+throughput story meets serving: every MoE layer sees the whole decode
+batch and builds exactly one ``DispatchPlan`` per step.  On top of the
+PR 3 batched step, the cache is now *paged* (DESIGN.md §9, vLLM-style,
+scaled to this container):
 
-* **Slots are a contiguous prefix.**  Active requests occupy cache rows
-  [0, n_active); retirement swaps the freed row with the last active one
-  (a device-side row swap), so the decode step is a fixed-shape forward
-  over the prefix — no masking, no garbage tokens in the dispatch plan.
-* **One sync per step.**  Argmax and EOS detection run on device
-  (serve/step.py); the engine performs a single host transfer per decode
-  step for all slots, instead of one per slot.
-* **Admission never disturbs decodes.**  Prefill writes only its slot's
-  cache row; which pending request is admitted is a pluggable policy
-  (serve/admission.py: fcfs / sjf).
-* **Telemetry.**  The step's shared plan aux (router losses + sched/*
-  ScheduleStats summed over MoE layers) is kept per request rid and
-  materialized into ``Request.stats`` at retirement, tagged with the
-  decode-batch size the request last shared.
+* **Paged pool, host block tables.**  The device holds a global pool of
+  fixed-size KV blocks (serve/kv_cache.py); each slot owns a block table.
+  Reads gather the slot's logical view through the table, writes scatter
+  block-granular — the contiguous ``(slots, capacity)`` buffer and its
+  device row swaps are gone (slot compaction is a host-side table move).
+* **Chunked prefill rides the decode plan.**  Admission assigns a slot
+  and nothing else; the prompt is processed as fixed-size chunks of
+  tokens that join the decode step's token batch — one forward, one
+  DispatchPlan per MoE layer covering decode tokens AND chunk tokens
+  together.  Prefill never stalls decoding slots, and MoE plans see
+  larger, better-balanced batches (asserted via plan_dispatch counting).
+* **Prefix caching.**  Full prompt blocks are content-hashed (chained) at
+  admission; hit blocks are refcount-shared, their tokens skip both
+  attention prefill and MoE dispatch entirely (chunking starts after the
+  cached prefix).  Retired blocks park in an LRU pool for future hits.
+* **One sync per step** (unchanged): argmax + EOS compare on device, one
+  host transfer for the whole token batch.
+
+Families whose caches are not positional KV (rwkv/ssm recurrent state,
+the vlm image-KV cross blocks, zamba2's mamba layers) fall back to the
+pre-paging contiguous engine — same public behavior, selected
+automatically (or force with ``kv_block_size=0``).
 """
 from __future__ import annotations
 
@@ -35,7 +41,11 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models.lm import RunConfig, init_cache, swap_cache_slots
 from repro.serve.admission import get_admission
-from repro.serve.step import make_slot_decode_step, make_slot_prefill_step
+from repro.serve.kv_cache import PagedKVCache, paged_supported
+from repro.serve.step import (make_paged_step, make_slot_decode_step,
+                              make_slot_prefill_step)
+
+DEFAULT_KV_BLOCK = 16
 
 
 @dataclasses.dataclass
@@ -49,15 +59,20 @@ class Request:
     # dispatch-plan telemetry, set at retirement from the request's final
     # step (router aux + sched/* ScheduleStats when the model is MoE and
     # stats are enabled), summed over the MoE layers of that step; the
-    # plan is shared by every slot decoding in that step, and
-    # ``serve/decode_batch`` records how many
+    # plan is shared by every token in that step, and ``serve/decode_batch``
+    # records how many slots decoded in it.  Paged runs add
+    # ``serve/prefix_hit_tokens`` (prompt tokens served from shared
+    # blocks, never dispatched) and ``serve/prefill_forwards`` (chunk
+    # steps this request's prompt rode in).
     stats: dict = dataclasses.field(default_factory=dict)
 
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
                  capacity: int = 256, rc: Optional[RunConfig] = None,
-                 admission: str = "fcfs"):
+                 admission: str = "fcfs",
+                 kv_block_size: Optional[int] = None,
+                 prefix_cache: bool = True, prefill_chunk: int = 32):
         self.cfg = cfg
         # serving default: the dynamic schedule policy — production traffic
         # is skewed and decode batches are small, exactly the regime where
@@ -73,10 +88,14 @@ class ServeEngine:
         self.params = params
         self.slots = slots
         self.capacity = capacity
-        # ONE batched cache; slot s owns row s (batch axis of every leaf)
-        self.cache = init_cache(cfg, slots, capacity)
+        if kv_block_size is None:       # auto: paged wherever pageable
+            kv_block_size = DEFAULT_KV_BLOCK if paged_supported(cfg) else 0
+        self.kv_block_size = kv_block_size
+        self.paged = kv_block_size > 0
+        self.prefill_chunk = max(1, prefill_chunk)
         self.pos = np.zeros(slots, np.int64)          # per-slot positions
         # active requests occupy slots [0, n_active) — prefix invariant
+        # (paged keeps it too: compaction is a host-side table move)
         self.active: List[Optional[Request]] = [None] * slots
         self.n_active = 0
         # per-active-request shared step aux (device scalars; materialized
@@ -87,10 +106,23 @@ class ServeEngine:
         self.dropped: List[Request] = []
         self._admission = get_admission(admission)
 
-        self._prefill = make_slot_prefill_step(cfg, self.rc)
-        # one compiled decode step per distinct active-slot count (<= slots)
-        self._decode_steps: Dict[int, object] = {}
-        self._swap = jax.jit(swap_cache_slots)
+        if self.paged:
+            self.kv = PagedKVCache(cfg, slots, capacity, kv_block_size,
+                                   prefix_cache=prefix_cache)
+            self.cache = None
+            self._pstep = make_paged_step(cfg, self.rc)
+            # prompt-prefill cursor: prompt tokens whose KV is written
+            self._prefill_next = np.zeros(slots, np.int64)
+            self._prefix_hit = np.zeros(slots, np.int64)
+            self._prefill_forwards = np.zeros(slots, np.int64)
+        else:
+            # ONE batched contiguous cache; slot s owns row s of every leaf
+            self.kv = None
+            self.cache = init_cache(cfg, slots, capacity)
+            self._prefill = make_slot_prefill_step(cfg, self.rc)
+            # one compiled decode step per distinct active count (<= slots)
+            self._decode_steps: Dict[int, object] = {}
+            self._swap = jax.jit(swap_cache_slots)
 
     # ------------------------------------------------------------------
     def _batch(self, toks):
@@ -102,7 +134,12 @@ class ServeEngine:
         return b
 
     def admit(self, req: Request) -> bool:
-        """Prefill ``req`` into the first free slot row; False if full."""
+        """Claim a free slot for ``req``; False if full.
+
+        Contiguous mode prefills the whole prompt here (one forward).
+        Paged mode only attaches prefix-cache hits and sets the chunk
+        cursor — the prompt is processed chunk-by-chunk inside subsequent
+        ``step()`` token batches, so admission never runs a forward."""
         if self.n_active >= self.slots:
             return False
         if any(r is not None and r.rid == req.rid for r in self.active):
@@ -110,19 +147,108 @@ class ServeEngine:
             # would silently cross their stats and crash at retirement
             raise ValueError(f"rid {req.rid} is already active")
         s = self.n_active
-        toks = jnp.asarray(req.prompt, jnp.int32)[None]
-        tok, self.cache, aux = self._prefill(
-            self.params, self.cache, self._batch(toks), jnp.int32(s))
-        self.pos[s] = len(req.prompt)
-        req.out.append(int(tok[0]))
-        self._last_aux[req.rid] = aux
+        if self.paged:
+            # capacity governs, not the block-rounded table size: a
+            # prompt in the rounding slack would fit the blocks but
+            # diverge from the contiguous engine's (slots, capacity) rows
+            limit = min(self.capacity,
+                        self.kv.blocks_per_slot * self.kv.block_size)
+            if len(req.prompt) > limit:
+                # fail loudly BEFORE claiming a slot (a mid-step failure
+                # would take every active request's state down with it)
+                raise ValueError(
+                    f"prompt of {len(req.prompt)} tokens exceeds slot "
+                    f"capacity {limit} ({self.kv.blocks_per_slot} blocks "
+                    f"of {self.kv.block_size})")
+            n_cached = self.kv.attach_prefix(s, req.prompt)
+            self.pos[s] = n_cached
+            self._prefill_next[s] = n_cached
+            self._prefix_hit[s] = n_cached
+            self._prefill_forwards[s] = 0
+            self._last_aux[req.rid] = {}
+        else:
+            toks = jnp.asarray(req.prompt, jnp.int32)[None]
+            tok, self.cache, aux = self._prefill(
+                self.params, self.cache, self._batch(toks), jnp.int32(s))
+            self.pos[s] = len(req.prompt)
+            req.out.append(int(tok[0]))
+            self._last_aux[req.rid] = aux
         self.active[s] = req
         self.n_active += 1
         return True
 
+    # ------------------------------------------------------------------
     def step(self) -> int:
-        """One decode step across ALL active slots: one jit call, one host
-        sync.  Returns the number of slots that decoded."""
+        """One engine step: ONE jit call, ONE host sync, covering every
+        active slot.  Returns the number of TOKENS processed (== active
+        slots in a pure-decode step; larger while prompts are chunk-
+        prefilling in paged mode; 0 when idle)."""
+        return self._step_paged() if self.paged else self._step_contig()
+
+    # -- paged ---------------------------------------------------------
+    def _step_paged(self) -> int:
+        n = self.n_active
+        if n == 0:
+            return 0
+        # assemble the step's token batch: per slot either its decode
+        # token or the next chunk of its prompt
+        rows = []                       # (slot, token, position, kind)
+        for s in range(n):
+            r = self.active[s]
+            nx = int(self._prefill_next[s])
+            P = len(r.prompt)
+            if nx < P:
+                c = min(self.prefill_chunk, P - nx)
+                for j in range(c):
+                    kind = "final" if nx + j == P - 1 else "chunk"
+                    rows.append((s, int(r.prompt[nx + j]), nx + j, kind))
+            else:
+                rows.append((s, r.out[-1], int(self.pos[s]), "decode"))
+        for s in {row[0] for row in rows}:
+            self.kv.ensure_allocated(
+                s, max(p for sl, _, p, _ in rows if sl == s))
+        tables = jnp.asarray(self.kv.table_rows([row[0] for row in rows]))
+        toks = jnp.asarray([[t] for _, t, _, _ in rows], jnp.int32)
+        pos = jnp.asarray([p for _, _, p, _ in rows], jnp.int32)
+        eos = jnp.asarray(
+            [(-1 if (k != "decode" or self.active[s].eos is None)
+              else self.active[s].eos) for s, _, _, k in rows], jnp.int32)
+        tok, eos_hit, self.kv.pools, aux = self._pstep(
+            self.params, self.kv.pools, self._batch(toks), pos, tables, eos)
+        tok_np, eos_np = jax.device_get((tok, eos_hit))  # the ONE host sync
+
+        decode_row: Dict[int, int] = {}
+        chunks = np.zeros(n, np.int64)
+        for i, (s, _t, _p, kind) in enumerate(rows):
+            self._last_aux[self.active[s].rid] = aux
+            if kind == "decode":
+                self.active[s].out.append(int(tok_np[i]))
+                self.pos[s] += 1
+                decode_row[s] = i
+            else:
+                chunks[s] += 1
+                if kind == "final":       # prompt complete: first token
+                    self.active[s].out.append(int(tok_np[i]))
+        for s in np.nonzero(chunks)[0]:
+            self._prefill_next[s] += chunks[s]
+            self.pos[s] += chunks[s]
+            self._prefill_forwards[s] += 1
+            self.kv.register_filled(int(s), self.active[s].prompt,
+                                    int(self._prefill_next[s]))
+        # retire top-down so compaction (move-last-into-freed) never moves
+        # a slot we still have to examine
+        n_decode = len(decode_row)
+        for s in range(n - 1, -1, -1):
+            if s not in decode_row:
+                continue
+            r = self.active[s]
+            if bool(eos_np[decode_row[s]]) or len(r.out) >= r.max_new \
+                    or self.pos[s] >= self.capacity - 1:
+                self._retire(s, decode_batch=n_decode)
+        return len(rows)
+
+    # -- contiguous (pre-paging fallback) ------------------------------
+    def _step_contig(self) -> int:
         n = self.n_active
         if n == 0:
             return 0
@@ -151,20 +277,38 @@ class ServeEngine:
                 self._retire(s, decode_batch=n)
         return n
 
+    # ------------------------------------------------------------------
     def _retire(self, s: int, *, decode_batch: int) -> None:
-        """Free slot ``s``: materialize telemetry, swap the freed cache row
-        with the last active one to keep the active prefix contiguous."""
+        """Free slot ``s``: materialize telemetry, keep the active prefix
+        contiguous (paged: host-side table move + block refcount release;
+        contiguous: device row swap)."""
         req = self.active[s]
         req.stats = {k: float(v)
                      for k, v in self._last_aux.pop(req.rid).items()}
         req.stats["serve/decode_batch"] = float(decode_batch)
-        req.done = True
         last = self.n_active - 1
-        if s != last:
-            self.cache = self._swap(self.cache, jnp.int32(s),
-                                    jnp.int32(last))
-            self.active[s] = self.active[last]
-            self.pos[s] = self.pos[last]
+        if self.paged:
+            req.stats["serve/prefix_hit_tokens"] = float(self._prefix_hit[s])
+            req.stats["serve/prefill_forwards"] = \
+                float(self._prefill_forwards[s])
+            self.kv.release_slot(s)
+            if s != last:
+                self.kv.move_slot(s, last)
+                self.active[s] = self.active[last]
+                self.pos[s] = self.pos[last]
+                self._prefill_next[s] = self._prefill_next[last]
+                self._prefix_hit[s] = self._prefix_hit[last]
+                self._prefill_forwards[s] = self._prefill_forwards[last]
+            self._prefill_next[last] = 0
+            self._prefix_hit[last] = 0
+            self._prefill_forwards[last] = 0
+        else:
+            if s != last:
+                self.cache = self._swap(self.cache, jnp.int32(s),
+                                        jnp.int32(last))
+                self.active[s] = self.active[last]
+                self.pos[s] = self.pos[last]
+        req.done = True
         self.active[last] = None
         self.pos[last] = 0
         self.n_active -= 1
@@ -182,7 +326,8 @@ class ServeEngine:
         self.dropped = []
         for _ in range(max_steps):
             while pending and self.n_active < self.slots:
-                self.admit(pending.pop(self._admission(pending)))
+                self.admit(pending.pop(
+                    self._admission(pending, engine=self)))
             if self.step() == 0 and not pending:
                 break
         self.dropped = [r for r in requests if not r.done]

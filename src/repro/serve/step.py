@@ -76,6 +76,29 @@ def make_slot_prefill_step(cfg: ModelConfig, rc: RunConfig):
     return jax.jit(prefill_step)
 
 
+def make_paged_step(cfg: ModelConfig, rc: RunConfig):
+    """ONE step function for the paged engine: decode tokens and prefill-
+    chunk tokens ride in the SAME token batch, so every MoE layer builds a
+    single DispatchPlan covering all of them.
+
+    Returns jitted ``(params, pools, batch, pos, tables, eos) -> (tok,
+    eos_hit, pools', aux)`` where each row of ``batch["tokens"]`` (T, 1) is
+    one token — a slot's decode token or one token of a prompt chunk —
+    with its own position ``pos[t]`` and its slot's block-table row
+    ``tables[t]``.  KV writes scatter block-granular into the pools; reads
+    gather each row's logical view (models/attention.py).  jit re-
+    specializes per distinct T (decode-only steps reuse T = n_active,
+    bounded by slots; chunk steps add one shape per distinct chunk
+    layout)."""
+    def paged_step(params, pools, batch, pos, tables, eos):
+        logits, pools, aux = forward(params, cfg, rc, batch, mode="decode",
+                                     cache=pools, pos=pos,
+                                     block_tables=tables)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)     # (T,)
+        return tok, tok == eos, pools, aux
+    return jax.jit(paged_step)
+
+
 def make_slot_decode_step(cfg: ModelConfig, rc: RunConfig, n: int):
     """One decode step for the ``n`` active slots (prefix rows [0, n)).
 

@@ -1,12 +1,27 @@
-"""Optional-hypothesis shim.
+"""Optional-hypothesis shim with a FIXED-EXAMPLES fallback.
 
 When hypothesis is installed (requirements-dev.txt) this re-exports the
-real API.  When it is not, ``@given`` replaces the test with a skipped
-placeholder and ``st``/``settings`` become inert stand-ins, so the plain
-pytest tests sharing a module with property tests still run — instead of
-the whole module failing at collection on the import.
+real API unchanged.  When it is not, ``@given`` does NOT skip anymore: it
+runs the test body over a deterministic set of examples drawn from a
+mini-strategy implementation of the subset of the API this repo uses
+(integers / sampled_from / booleans / floats / lists / tuples / just /
+one_of / permutations / composite, plus .map/.filter).  Draws come from
+``random.Random`` seeded by (REPRO_FUZZ_SEED, test name, example index),
+so every failure replays exactly and CI/local runs agree.
+
+Knobs (fallback mode only — under real hypothesis use its own settings):
+
+* ``REPRO_FUZZ_SEED``     — base seed (default 0; CI pins it and passes
+  ``--hypothesis-seed=0`` to the real library for the same property).
+* ``REPRO_FUZZ_EXAMPLES`` — examples per test (default 10).  The real
+  library's ``max_examples`` in ``@settings`` is honored as an upper
+  bound when smaller.
 """
-import pytest
+
+import os
+import random
+
+import pytest  # noqa: F401  (kept: some callers import it via this shim)
 
 try:
     from hypothesis import given, settings, strategies as st  # noqa: F401
@@ -14,25 +29,134 @@ try:
 except ImportError:
     HAVE_HYPOTHESIS = False
 
-    def given(*_a, **_k):
+    FALLBACK_SEED = int(os.environ.get("REPRO_FUZZ_SEED", "0"))
+    FALLBACK_EXAMPLES = int(os.environ.get("REPRO_FUZZ_EXAMPLES", "10"))
+
+    class _Strategy:
+        """A draw function + the combinators the repo's tests use."""
+
+        def __init__(self, draw_fn):
+            self._draw_fn = draw_fn
+
+        def _draw(self, rnd):
+            return self._draw_fn(rnd)
+
+        def map(self, f):
+            return _Strategy(lambda rnd: f(self._draw(rnd)))
+
+        def filter(self, pred):
+            def draw(rnd):
+                for _ in range(10_000):
+                    v = self._draw(rnd)
+                    if pred(v):
+                        return v
+                raise ValueError("filter predicate rejected 10k draws")
+            return _Strategy(draw)
+
+    class _St:
+        """Deterministic stand-ins for the strategies this repo uses."""
+
+        @staticmethod
+        def integers(min_value=0, max_value=1 << 16):
+            return _Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(lambda rnd: seq[rnd.randrange(len(seq))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rnd: rnd.random() < 0.5)
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(
+                lambda rnd: rnd.uniform(min_value, max_value))
+
+        @staticmethod
+        def just(value):
+            return _Strategy(lambda rnd: value)
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10, **_kw):
+            def draw(rnd):
+                n = rnd.randint(min_size, max_size)
+                return [elements._draw(rnd) for _ in range(n)]
+            return _Strategy(draw)
+
+        @staticmethod
+        def tuples(*strats):
+            return _Strategy(
+                lambda rnd: tuple(s._draw(rnd) for s in strats))
+
+        @staticmethod
+        def one_of(*strats):
+            return _Strategy(
+                lambda rnd: strats[rnd.randrange(len(strats))]._draw(rnd))
+
+        @staticmethod
+        def permutations(seq):
+            seq = list(seq)
+
+            def draw(rnd):
+                out = list(seq)
+                rnd.shuffle(out)
+                return out
+            return _Strategy(draw)
+
+        @staticmethod
+        def composite(fn):
+            """``@st.composite`` — the wrapped fn's first arg becomes a
+            ``draw`` callable resolving sub-strategies."""
+            def build(*args, **kwargs):
+                return _Strategy(lambda rnd: fn(
+                    lambda strat: strat._draw(rnd), *args, **kwargs))
+            return build
+
+    st = _St()
+
+    def given(*arg_strats, **kw_strats):
         def deco(fn):
-            @pytest.mark.skip(reason="hypothesis not installed "
-                              "(pip install -r requirements-dev.txt)")
-            def placeholder():
-                pass
-            placeholder.__name__ = fn.__name__
-            placeholder.__doc__ = fn.__doc__
-            return placeholder
+            # honor a cap stashed by an inner @settings (the decorator
+            # order `@given` above `@settings` — the common spelling)
+            cap = getattr(fn, "_fallback_settings_cap", None)
+            max_examples = [FALLBACK_EXAMPLES if cap is None
+                            else min(FALLBACK_EXAMPLES, cap)]
+
+            # NOT functools.wraps: the wrapper must expose a paramless
+            # signature or pytest resolves the strategy args as fixtures
+            def runner(*fargs, **fkwargs):
+                n = max_examples[0]
+                for i in range(n):
+                    rnd = random.Random(
+                        repr((FALLBACK_SEED, fn.__name__, i)))
+                    drawn = tuple(s._draw(rnd) for s in arg_strats)
+                    kw = {k: s._draw(rnd) for k, s in kw_strats.items()}
+                    try:
+                        fn(*fargs, *drawn, **fkwargs, **kw)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"fixed-examples fallback: {fn.__name__} "
+                            f"failed on example {i} "
+                            f"(REPRO_FUZZ_SEED={FALLBACK_SEED}; rerun "
+                            f"with the same seed to replay): {e}") from e
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            runner._fallback_max_examples = max_examples
+            return runner
         return deco
 
-    def settings(*_a, **_k):
-        return lambda fn: fn
-
-    class _Strategies:
-        """Every strategy becomes a callable returning an inert callable
-        (so ``@st.composite`` definitions still evaluate at import)."""
-
-        def __getattr__(self, _name):
-            return lambda *a, **k: (lambda *a2, **k2: None)
-
-    st = _Strategies()
+    def settings(*_a, max_examples=None, **_k):
+        """Honor ``max_examples`` as an upper bound in EITHER decorator
+        order; everything else (deadline, suppress_health_check, ...) is
+        hypothesis-only."""
+        def deco(fn):
+            if max_examples is not None:
+                box = getattr(fn, "_fallback_max_examples", None)
+                if box is not None:          # @settings above @given
+                    box[0] = min(box[0], max_examples)
+                else:                        # @settings below @given:
+                    fn._fallback_settings_cap = max_examples
+            return fn
+        return deco

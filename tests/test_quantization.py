@@ -168,6 +168,96 @@ def test_quant_tensor_jit_retraces_only_on_scheme_change():
 
 
 # ----------------------------------------------------------------------
+# QuantTensor property tests (ISSUE 5 satellite): round-trip bound and
+# pytree identity for EVERY registered scheme over random shapes — incl.
+# the K-odd edge case int4_packed stores with a tagged pad row.
+# ----------------------------------------------------------------------
+from hypothesis_compat import given, settings, st  # noqa: E402
+
+
+@st.composite
+def stack_shapes(draw):
+    lead = draw(st.sampled_from([(), (3,)]))       # optional layer-group axis
+    E = draw(st.integers(1, 8))
+    K = draw(st.integers(1, 17))                   # odd K included
+    N = draw(st.integers(1, 16))
+    scheme = draw(st.sampled_from(QUANT_SCHEMES))
+    seed = draw(st.integers(0, 2 ** 16))
+    scale = draw(st.sampled_from([1e-3, 0.3, 10.0]))
+    return lead + (E, K, N), scheme, seed, scale
+
+
+@given(stack_shapes())
+@settings(max_examples=25, deadline=None)
+def test_quantize_dequantize_roundtrip_bound(case):
+    """Element-wise round-trip error <= half a quantization step of the
+    per-element scale, for every scheme at every drawn shape/magnitude —
+    including odd K (int4 pad row must not leak into the output)."""
+    shape, scheme, seed, scale = case
+    w = jax.random.normal(jax.random.key(seed), shape) * scale
+    qt = get_scheme(scheme).quantize(w)
+    assert qt.shape == shape, (scheme, qt.shape, shape)
+    back = qt.materialize()
+    assert back.shape == shape
+    # error <= half a step of each element's own scale
+    err = jnp.abs(back - w) / jnp.maximum(qt.s, 1e-12)
+    assert float(jnp.max(err)) <= 0.51, (case, float(jnp.max(err)))
+    # per-block gather dequant == materialized slice (odd-K strip incl.)
+    idx = (0,) * (len(shape) - 3) + (shape[-3] - 1,)
+    np.testing.assert_array_equal(np.asarray(qt[idx]),
+                                  np.asarray(back[idx]))
+
+
+@given(stack_shapes())
+@settings(max_examples=15, deadline=None)
+def test_quant_tensor_pytree_flatten_unflatten_identity(case):
+    """tree_flatten -> tree_unflatten is the identity for every scheme:
+    leaves are exactly (q, s), static aux (dtype, scheme, meta) survives,
+    and a jit boundary round-trips the tagged tree unchanged."""
+    shape, scheme, seed, scale = case
+    w = jax.random.normal(jax.random.key(seed), shape) * scale
+    qt = get_scheme(scheme).quantize(w)
+    leaves, treedef = jax.tree_util.tree_flatten(qt)
+    assert len(leaves) == 2
+    qt2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert (qt2.scheme, qt2.dtype, qt2.meta) == (qt.scheme, qt.dtype,
+                                                 qt.meta)
+    assert qt2.shape == qt.shape == shape
+    np.testing.assert_array_equal(np.asarray(qt2.q), np.asarray(qt.q))
+    np.testing.assert_array_equal(np.asarray(qt2.s), np.asarray(qt.s))
+    qt3 = jax.jit(lambda t: t)(qt)                 # identity through jit
+    assert (qt3.scheme, qt3.meta) == (qt.scheme, qt.meta)
+    np.testing.assert_array_equal(np.asarray(qt3.materialize()),
+                                  np.asarray(qt.materialize()))
+
+
+def test_int4_odd_k_padding_edge_case():
+    """K odd: the packed payload stores (K+1)//2 byte rows, the pad row is
+    tagged in static meta, dequant strips it (shape + values), and the
+    kernel operand split falls back to the dense layout rather than
+    feeding a padded payload to the in-kernel dequant."""
+    from repro.kernels.ops import _weight_operands
+    w = jax.random.normal(jax.random.key(3), (4, 7, 6)) * 0.5
+    qt = get_scheme("int4_packed").quantize(w)
+    assert qt.meta == (("pad_k", 1),)
+    assert qt.q.shape == (4, 4, 6)                 # ceil(7/2) byte rows
+    assert qt.shape == (4, 7, 6)
+    back = qt.materialize()
+    assert back.shape == (4, 7, 6)
+    np.testing.assert_array_equal(np.asarray(qt[2]), np.asarray(back[2]))
+    err = jnp.max(jnp.abs(back - w) / jnp.maximum(qt.s, 1e-12))
+    assert float(err) <= 0.51
+    wq, ws, fmt, (K, N) = _weight_operands(qt)
+    assert fmt == "dense" and (K, N) == (7, 6) and ws is None
+    np.testing.assert_array_equal(np.asarray(wq), np.asarray(back))
+    # even K stays on the compressed in-kernel path
+    qt_even = get_scheme("int4_packed").quantize(w[:, :6, :])
+    assert qt_even.meta == ()
+    _, _, fmt_even, _ = _weight_operands(qt_even)
+    assert fmt_even == "int4"
+
+
+# ----------------------------------------------------------------------
 # Acceptance: scheme x executor x policy on the paper configs
 # ----------------------------------------------------------------------
 @pytest.mark.parametrize("executor", ["xla", "pallas"])

@@ -55,6 +55,16 @@ def expected_keep(idx, cap):
 def test_schedule_invariants(alpha, policy, kw, shape):
     T, k, E, M = shape
     idx = zipf_idx(T, k, E, alpha)
+    check_schedule_invariants(idx, E, M, policy, kw)
+
+
+def check_schedule_invariants(idx: np.ndarray, E: int, M: int,
+                              policy: str, kw: dict) -> None:
+    """The full invariant battery for one (assignments, policy) point:
+    permutation-bijection on kept tokens, per-expert token conservation,
+    capacity-drop accounting (first-come-first-kept bucket overflow), and
+    single-expert block ownership (the kernel contract)."""
+    T, k = idx.shape
     sched = build_schedule(jnp.asarray(idx), E, M, policy=policy, **kw)
     src = np.asarray(sched.src_tok)
     pos = np.asarray(sched.pos)
@@ -168,6 +178,66 @@ def test_policies_build_inside_jit_no_host_sync():
         fn = jax.jit(lambda i: build_schedule(
             i, E, M, policy=policy, **kw).src_tok.sum())
         assert int(fn(idx)) >= 0
+
+
+# ---------------------------------------------------------------------------
+# Property tests over hypothesis-generated routings (ISSUE 5 satellite):
+# the zipf fixtures above pin three skews; these fuzz the assignment space
+# including the degenerate corners a sampled distribution never produces.
+# ---------------------------------------------------------------------------
+from hypothesis_compat import given, settings, st  # noqa: E402
+
+
+@st.composite
+def routing_draws(draw):
+    E = draw(st.sampled_from([2, 8, 64]))
+    k = draw(st.integers(1, min(4, E)))
+    T = draw(st.sampled_from([16, 64, 256]))
+    M = draw(st.sampled_from([8, 16, 32]))
+    pattern = draw(st.sampled_from(
+        ["random", "one_expert", "uniform_ties", "zipf2", "two_hot"]))
+    seed = draw(st.integers(0, 2 ** 16))
+    rng = np.random.default_rng(seed)
+    if pattern == "one_expert":
+        # fully degenerate: every assignment routed to expert 0 — the
+        # worst case for capacity buckets and dynamic block sizing
+        idx = np.zeros((T, k), np.int32)
+    elif pattern == "uniform_ties":
+        # perfectly uniform striping (exact ties everywhere): every
+        # expert count identical, exercising tie-stable ordering
+        idx = ((np.arange(T)[:, None] * k + np.arange(k)[None, :]) % E
+               ).astype(np.int32)
+    elif pattern == "two_hot":
+        idx = rng.choice([0, E - 1], size=(T, k)).astype(np.int32)
+    elif pattern == "zipf2":
+        idx = zipf_idx(T, k, E, 2.0, seed=seed)
+    else:
+        idx = rng.integers(0, E, size=(T, k)).astype(np.int32)
+    return idx, E, M
+
+
+@given(routing_draws())
+@settings(max_examples=20, deadline=None)
+def test_policy_invariants_on_fuzzed_routings(case):
+    """Bijection, conservation, and capacity-drop accounting hold for
+    EVERY registered policy on fuzzed assignments, including all-one-
+    expert and exactly-tied-uniform degenerate routings."""
+    idx, E, M = case
+    for policy, kw in POLICIES:
+        check_schedule_invariants(idx, E, M, policy, kw)
+
+
+@given(routing_draws())
+@settings(max_examples=10, deadline=None)
+def test_fuzzed_dynamic_padding_never_worse_than_fixed(case):
+    idx, E, M = case
+    st_fixed = schedule_stats(build_schedule(jnp.asarray(idx), E, M,
+                                             policy="fixed"))
+    st_dyn = schedule_stats(build_schedule(jnp.asarray(idx), E, M,
+                                           policy="dynamic"))
+    assert int(st_dyn.padded_rows) <= int(st_fixed.padded_rows)
+    assert int(st_dyn.useful_rows) == int(st_fixed.useful_rows) \
+        == idx.size
 
 
 def test_dynamic_sub_block_divides_block_m():
