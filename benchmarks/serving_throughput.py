@@ -36,6 +36,7 @@ from benchmarks.common import emit
 from repro.configs import get_config, reduced
 from repro.execution import available_executors
 from repro.models import RunConfig, init_params
+from repro.obs import latency_summary
 from repro.quantization import available_schemes
 from repro.scheduling import available_policies
 from repro.serve.engine import Request, ServeEngine
@@ -70,7 +71,8 @@ def run_cell(cfg, params, *, slots: int, policy: str, executor: str,
          f"tok_per_s={tok_per_s:.1f}")
     return {"slots": slots, "policy": policy, "executor": executor,
             "quant": quant, "steps": steps, "s_per_step": s_per_step,
-            "tok_per_s": tok_per_s, "kv_block": eng.kv_block_size}
+            "tok_per_s": tok_per_s, "kv_block": eng.kv_block_size,
+            "kv_stats": eng.kv.stats() if eng.paged else None}
 
 
 # ----------------------------------------------------------------------
@@ -143,6 +145,8 @@ def run_workload_cell(cfg, params, *, mode: str, executor: str, slots: int,
            "decode_tok_per_forward": resident_tokens / forwards,
            "wall_s": dt,
            "tok_per_s": (decode_tokens + resident_tokens) / dt,
+           "latency": latency_summary(reqs),
+           "kv_stats": eng.kv.stats() if eng.paged else None,
            "outputs": {r.rid: r.out for r in reqs}}
     emit(f"workload_{mode}", dt / max(forwards, 1),
          f"resident_tok_per_fwd={rec['decode_tok_per_forward']:.2f}")

@@ -73,6 +73,48 @@ def scheduling_table():
     return "\n".join(rows)
 
 
+def serving_table():
+    """Per-request latency + paged-cache telemetry from
+    benchmarks/serving_throughput.py (results/serve/*.json): the shared-
+    prefix workload cells carry TTFT/TPOT aggregates (nearest-rank
+    p50/p99 over retired requests, repro.obs.latency) and the final
+    ``PagedKVCache.stats()`` snapshot."""
+    serve_dir = ROOT / "results" / "serve"
+    docs = []
+    if serve_dir.exists():
+        for p in sorted(serve_dir.glob("*.json")):
+            try:
+                d = json.loads(p.read_text())
+            except (json.JSONDecodeError, UnicodeDecodeError):
+                continue
+            if isinstance(d, dict) and "records" in d:
+                docs.append(d)
+    cells = [(d.get("arch", "?"), r) for d in docs
+             for r in d.get("shared_prefix") or []]
+    if not cells:
+        return ("_(no records — run ``PYTHONPATH=src python -m "
+                "benchmarks.serving_throughput`` to populate "
+                "results/serve/)_")
+
+    def ms(agg):
+        return (f"{agg['p50'] * 1e3:.1f} / {agg['p99'] * 1e3:.1f}"
+                if agg else "—")
+
+    rows = ["| arch | mode | tok/s | TTFT p50/p99 ms | TPOT p50/p99 ms | "
+            "queue p50/p99 ms | kv in-use/total | prefix hit tok |",
+            "|" + "---|" * 8]
+    for arch, r in cells:
+        lat = r.get("latency") or {}
+        kv = r.get("kv_stats")
+        rows.append(
+            f"| {arch} | {r['mode']} | {r['tok_per_s']:.1f} | "
+            f"{ms(lat.get('ttft_s'))} | {ms(lat.get('tpot_s'))} | "
+            f"{ms(lat.get('queue_wait_s'))} | "
+            + (f"{kv['blocks_in_use']}/{kv['blocks_total']} | "
+               f"{kv['prefix_hit_tokens']} |" if kv else "— | — |"))
+    return "\n".join(rows)
+
+
 def perf_rows(paths, baseline_path, label):
     base = json.loads((ROOT / baseline_path).read_text())
     bc = base["collectives"]["total_bytes"]
@@ -103,6 +145,7 @@ def main():
     print(EXPERIMENTS_TEMPLATE.format(
         n_ok=len(ok), n_skip=len(skips),
         sched=scheduling_table(),
+        serving=serving_table(),
         dryrun=dryrun_table(dr),
         roofline=markdown_table(sorted(
             rl1, key=lambda r: (r.arch, r.shape))),
@@ -183,6 +226,17 @@ work; serving default).  ScheduleStats telemetry per (config x distribution
 x policy), from benchmarks/skew_sensitivity.py:
 
 {sched}
+
+## §Serving latency (beyond-paper; DESIGN.md §10)
+
+Per-request latency accounting is always on in the serve engine (host
+clock reads only — no device ops): TTFT, TPOT (mean inter-token gap),
+queue wait, end-to-end, materialized into ``Request.stats`` and
+aggregated to nearest-rank p50/p99.  The shared-prefix workload
+(benchmarks/serving_throughput.py) reports them per cache layout,
+alongside the run-final paged-cache counters:
+
+{serving}
 
 ## §Dry-run
 

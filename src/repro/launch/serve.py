@@ -61,14 +61,34 @@ def main():
                     choices=available_admission_policies(),
                     help="which pending request gets a freed slot "
                          "(fcfs, sjf = shortest prompt, prefix_hit = warmest cached prefix)")
+    ap.add_argument("--trace", nargs="?", const="results/trace/serve.json",
+                    default=None, metavar="PATH",
+                    help="write a Chrome-trace/Perfetto JSON of the step "
+                         "timeline (admit / prefix probe / assemble / "
+                         "forward / host sync / retire + recompile and "
+                         "slow-step instants); default path "
+                         "results/trace/serve.json")
+    ap.add_argument("--metrics-out", nargs="?",
+                    const="results/serve/metrics.json", default=None,
+                    metavar="PATH",
+                    help="write the metrics-registry snapshot (counters/"
+                         "gauges/histograms + TTFT/TPOT latency "
+                         "percentiles) as JSON")
+    ap.add_argument("--device-trace", default=None, metavar="DIR",
+                    help="bracket the run in a jax.profiler device trace "
+                         "written to DIR (best-effort: degrades to a "
+                         "warning when the profiler is unavailable)")
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
+
+    import contextlib
 
     import numpy as np
     import jax
 
     from repro.configs import get_config, reduced
     from repro.models import RunConfig, init_params
+    from repro.obs import NOOP, Observability, device_trace, latency_summary
     from repro.serve.engine import Request, ServeEngine
 
     cfg = get_config(args.arch)
@@ -89,11 +109,14 @@ def main():
         print(f"routed experts quantized under scheme {quant!r} "
               f"(serving layout)")
 
+    obs = (Observability.memory()
+           if (args.trace or args.metrics_out or args.device_trace)
+           else NOOP)
     engine = ServeEngine(cfg, params, slots=args.slots,
                          capacity=args.capacity, admission=args.admission,
                          kv_block_size=args.kv_block_size,
                          prefix_cache=args.prefix_cache,
-                         prefill_chunk=args.prefill_chunk,
+                         prefill_chunk=args.prefill_chunk, obs=obs,
                          rc=RunConfig(q_chunk=64, kv_chunk=64,
                                       executor=args.executor,
                                       schedule_policy=args.schedule_policy,
@@ -113,7 +136,10 @@ def main():
                                         rng.integers(3, 9)).astype(np.int32),
                     max_new=args.max_new)
             for i in range(args.requests)]
-    done = engine.run(reqs, max_steps=args.max_steps)
+    bracket = (device_trace(args.device_trace) if args.device_trace
+               else contextlib.nullcontext())
+    with bracket:
+        done = engine.run(reqs, max_steps=args.max_steps)
     for r in reqs:
         tag = "" if r.done else "  [INCOMPLETE: step budget exhausted]"
         print(f"req {r.rid}: {r.prompt.tolist()} -> {r.out}{tag}")
@@ -125,6 +151,14 @@ def main():
                       f"{int(r.stats.get('serve/decode_batch', 1))} slot(s), "
                       f"summed over moe layers): {sched}")
     print(f"{len(done)}/{len(reqs)} requests completed")
+    lat = latency_summary(reqs)
+    if lat:
+        for fam in ("ttft_s", "tpot_s", "queue_wait_s", "e2e_s"):
+            agg = lat.get(fam)
+            if agg:
+                print(f"  {fam:>13}: mean {agg['mean'] * 1e3:8.2f} ms  "
+                      f"p50 {agg['p50'] * 1e3:8.2f} ms  "
+                      f"p99 {agg['p99'] * 1e3:8.2f} ms  (n={agg['n']})")
     if engine.paged:
         print(f"paged-cache stats: {engine.kv.stats()}")
     if engine.dropped:
@@ -132,6 +166,16 @@ def main():
               f"--max-steps={args.max_steps} budget "
               f"(rids: {[r.rid for r in engine.dropped]}); partial outputs "
               f"retained on Request.out")
+    if args.trace:
+        path = engine.obs.tracer.save(args.trace)
+        print(f"chrome trace ({len(engine.obs.tracer.events)} events) "
+              f"-> {path}")
+    if args.metrics_out:
+        extra = {"latency": lat}
+        if engine.paged:
+            extra["kv_stats"] = engine.kv.stats()
+        engine.obs.metrics.to_json(args.metrics_out, extra=extra)
+        print(f"metrics snapshot -> {args.metrics_out}")
 
 
 if __name__ == "__main__":

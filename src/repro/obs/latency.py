@@ -1,0 +1,94 @@
+"""Per-request latency accounting: TTFT, TPOT, queue wait, E2E.
+
+MoE-Inference-Bench (PAPERS.md, 2508.17467) scores production MoE serving
+on per-request latency distributions — time-to-first-token and time-per-
+output-token at p50/p99 — which nothing in this repo measured before this
+layer.  The engine keeps one ``RequestTimeline`` per in-flight rid
+(host wall-clock stamps only: submit at ``run()`` entry, admit when a
+slot is claimed, one stamp per engine step shared by every token that
+step produced) and materializes it into ``Request.stats`` at retirement
+under the ``lat/*`` key family — the same dict that already carries the
+``sched/*`` plan stats and ``serve/*`` engine counters, so one schema
+covers all per-request telemetry (key parity between the paged and
+contiguous engines is asserted in tests/test_obs.py).
+
+Aggregation helpers turn a batch of retired requests into the p50/p99
+table ``benchmarks/serving_throughput.py`` records and
+``analysis/report.py`` renders.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from repro.obs.metrics import percentile
+
+# the contract: every retired request carries exactly these lat/* keys
+# (both engines, dense and MoE) — tests assert schema parity on them
+LAT_KEYS = ("lat/queue_wait_s", "lat/ttft_s", "lat/tpot_s", "lat/e2e_s",
+            "lat/decode_tokens")
+
+
+@dataclasses.dataclass
+class RequestTimeline:
+    """Host timestamps for one request's serve lifetime.
+
+    ``token_times`` holds one stamp per OUTPUT token (the step's shared
+    post-sync stamp — all tokens of one engine step are produced by the
+    same forward, so finer granularity would be fiction)."""
+    submit: float                       # entered the pending queue
+    admit: float = 0.0                  # claimed a slot
+    first_token: Optional[float] = None
+    token_times: List[float] = dataclasses.field(default_factory=list)
+
+    def on_token(self, t: float) -> None:
+        if self.first_token is None:
+            self.first_token = t
+        self.token_times.append(t)
+
+    def finalize(self, *, end: Optional[float] = None) -> dict:
+        """-> the ``lat/*`` entries for ``Request.stats``.
+
+        TPOT is the mean inter-token gap over DECODE tokens (first token
+        excluded — its cost is prefill and belongs to TTFT); a request
+        with a single output token has no decode gap and reports 0.0 so
+        every value stays finite (the churn test asserts finiteness)."""
+        tt = self.token_times
+        first = self.first_token if self.first_token is not None \
+            else (end if end is not None else self.admit)
+        last = tt[-1] if tt else first
+        tpot = (last - first) / (len(tt) - 1) if len(tt) > 1 else 0.0
+        return {
+            "lat/queue_wait_s": self.admit - self.submit,
+            "lat/ttft_s": first - self.submit,
+            "lat/tpot_s": tpot,
+            "lat/e2e_s": (end if end is not None else last) - self.submit,
+            "lat/decode_tokens": float(len(tt)),
+        }
+
+
+def aggregate(samples: List[float]) -> Optional[dict]:
+    """p50/p99/mean/n of one latency series; None on an empty one (so
+    consumers gate on truthiness instead of probing for keys)."""
+    if not samples:
+        return None
+    return {"n": len(samples),
+            "mean": float(sum(samples) / len(samples)),
+            "p50": percentile(samples, 50.0),
+            "p99": percentile(samples, 99.0)}
+
+
+def latency_summary(requests) -> dict:
+    """Aggregate retired requests' ``lat/*`` stats into the percentile
+    block recorded in ``results/serve/*.json`` and rendered by
+    ``analysis/report.py``:
+
+        {"ttft_s": {"n", "mean", "p50", "p99"}, "tpot_s": {...},
+         "queue_wait_s": {...}, "e2e_s": {...}}
+    """
+    done = [r for r in requests if getattr(r, "stats", None)]
+    out = {}
+    for key in ("ttft_s", "tpot_s", "queue_wait_s", "e2e_s"):
+        out[key] = aggregate([r.stats[f"lat/{key}"] for r in done
+                              if f"lat/{key}" in r.stats])
+    return out

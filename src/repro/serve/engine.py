@@ -28,6 +28,22 @@ Families whose caches are not positional KV (rwkv/ssm recurrent state,
 the vlm image-KV cross blocks, zamba2's mamba layers) fall back to the
 pre-paging contiguous engine — same public behavior, selected
 automatically (or force with ``kv_block_size=0``).
+
+**Observability (DESIGN.md §10).**  The engine accepts an
+``Observability`` bundle (repro.obs; default: null sinks): every step is
+bracketed into Chrome-trace spans (assemble / forward dispatch / the one
+host sync / postprocess), admission and the prefix-hash probe are
+spanned, recompile events fire from inside the jitted bodies at trace
+time, per-step KV-pool occupancy lands as gauges, the PR 2
+``StragglerMonitor`` flags slow steps, and retirement absorbs the
+request's ``sched/*`` plan stats into histograms.  All of it is
+host-side wall-clock over already-materialized values — NO device op is
+added, so greedy tokens are bitwise-identical with observability on or
+off (asserted in tests/test_obs.py).  Per-request latency accounting
+(``lat/*`` in ``Request.stats``: queue wait, TTFT, TPOT, E2E — the
+MoE-Inference-Bench axes) is always on; it costs a handful of host clock
+reads per step.  The ``lat/*`` + ``serve/*`` key schema is identical
+between the paged and contiguous engines.
 """
 from __future__ import annotations
 
@@ -39,7 +55,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.execution.base import set_plan_hook
 from repro.models.lm import RunConfig, init_cache, swap_cache_slots
+from repro.obs import NOOP, RequestTimeline
 from repro.serve.admission import get_admission
 from repro.serve.kv_cache import PagedKVCache, paged_supported
 from repro.serve.step import (make_paged_step, make_slot_decode_step,
@@ -72,8 +90,13 @@ class ServeEngine:
                  capacity: int = 256, rc: Optional[RunConfig] = None,
                  admission: str = "fcfs",
                  kv_block_size: Optional[int] = None,
-                 prefix_cache: bool = True, prefill_chunk: int = 32):
+                 prefix_cache: bool = True, prefill_chunk: int = 32,
+                 obs=None):
         self.cfg = cfg
+        # observability bundle (repro.obs); the null default makes every
+        # span/counter call a no-op — zero cost when off
+        self.obs = obs or NOOP
+        self._clock = self.obs.clock
         # serving default: the dynamic schedule policy — production traffic
         # is skewed and decode batches are small, exactly the regime where
         # the fixed tile layout pads worst (DESIGN.md §3) — with per-plan
@@ -102,6 +125,12 @@ class ServeEngine:
         # into Request.stats at retirement), keyed by rid — id(req) of a
         # retired request can be recycled by the allocator
         self._last_aux: Dict[int, dict] = {}
+        # per-request latency timelines (host wall-clock; always on) —
+        # keyed by rid, created at admission, popped at retirement; submit
+        # stamps recorded by run() for queue-wait accounting
+        self._timing: Dict[int, RequestTimeline] = {}
+        self._submit: Dict[int, float] = {}
+        self._step_idx = 0
         # requests still in flight/pending when run()'s step budget ran out
         self.dropped: List[Request] = []
         self._admission = get_admission(admission)
@@ -109,8 +138,9 @@ class ServeEngine:
         if self.paged:
             self.kv = PagedKVCache(cfg, slots, capacity, kv_block_size,
                                    prefix_cache=prefix_cache)
+            self.kv.bind_obs(self.obs.metrics, self.obs.tracer)
             self.cache = None
-            self._pstep = make_paged_step(cfg, self.rc)
+            self._pstep = make_paged_step(cfg, self.rc, self.obs)
             # prompt-prefill cursor: prompt tokens whose KV is written
             self._prefill_next = np.zeros(slots, np.int64)
             self._prefix_hit = np.zeros(slots, np.int64)
@@ -119,10 +149,28 @@ class ServeEngine:
             # ONE batched contiguous cache; slot s owns row s of every leaf
             self.kv = None
             self.cache = init_cache(cfg, slots, capacity)
-            self._prefill = make_slot_prefill_step(cfg, self.rc)
+            self._prefill = make_slot_prefill_step(cfg, self.rc, self.obs)
             # one compiled decode step per distinct active count (<= slots)
             self._decode_steps: Dict[int, object] = {}
             self._swap = jax.jit(swap_cache_slots)
+
+        if self.obs.enabled:
+            # plan-stats hook: every TRACED plan_dispatch reports its
+            # token count/backend/policy (process-global; last bundle
+            # installed wins — one observability bundle per process)
+            set_plan_hook(self.obs.on_plan)
+            if self.rc.quant != "none" and cfg.is_moe:
+                # the decode-dominant cost this serving config moves per
+                # expert gather: compressed payload bytes under the scheme
+                from repro.quantization import QuantTensor
+                leaves = jax.tree.leaves(
+                    self.params,
+                    is_leaf=lambda x: isinstance(x, QuantTensor))
+                self.obs.metrics.set_gauge(
+                    "serve/quant_expert_bytes",
+                    sum(l.nbytes for l in leaves
+                        if isinstance(l, QuantTensor)),
+                    scheme=self.rc.quant)
 
     # ------------------------------------------------------------------
     def _batch(self, toks):
@@ -146,7 +194,19 @@ class ServeEngine:
             # telemetry is keyed by rid; two live requests sharing one
             # would silently cross their stats and crash at retirement
             raise ValueError(f"rid {req.rid} is already active")
+        t_admit = self._clock()
+        with self.obs.tracer.span("serve/admit", rid=req.rid,
+                                  prompt_tokens=len(req.prompt)):
+            self._admit(req, t_admit)
+        self.obs.metrics.inc("serve/admitted")
+        return True
+
+    def _admit(self, req: Request, t_admit: float) -> None:
         s = self.n_active
+        # queue wait spans run()'s submit stamp -> slot claim; a request
+        # admitted directly (no run()) has zero queue wait by definition
+        tl = RequestTimeline(submit=self._submit.pop(req.rid, t_admit),
+                             admit=t_admit)
         if self.paged:
             # capacity governs, not the block-rounded table size: a
             # prompt in the rounding slack would fit the blocks but
@@ -168,14 +228,18 @@ class ServeEngine:
             self._last_aux[req.rid] = {}
         else:
             toks = jnp.asarray(req.prompt, jnp.int32)[None]
-            tok, self.cache, aux = self._prefill(
-                self.params, self.cache, self._batch(toks), jnp.int32(s))
-            self.pos[s] = len(req.prompt)
-            req.out.append(int(tok[0]))
+            with self.obs.tracer.span("serve/prefill", rid=req.rid,
+                                      prompt_tokens=len(req.prompt)):
+                tok, self.cache, aux = self._prefill(
+                    self.params, self.cache, self._batch(toks),
+                    jnp.int32(s))
+                self.pos[s] = len(req.prompt)
+                req.out.append(int(tok[0]))     # forces the prefill sync
+            tl.on_token(self._clock())          # first token: TTFT stamp
             self._last_aux[req.rid] = aux
+        self._timing[req.rid] = tl
         self.active[s] = req
         self.n_active += 1
-        return True
 
     # ------------------------------------------------------------------
     def step(self) -> int:
@@ -190,98 +254,152 @@ class ServeEngine:
         n = self.n_active
         if n == 0:
             return 0
-        # assemble the step's token batch: per slot either its decode
-        # token or the next chunk of its prompt
-        rows = []                       # (slot, token, position, kind)
-        for s in range(n):
-            r = self.active[s]
-            nx = int(self._prefill_next[s])
-            P = len(r.prompt)
-            if nx < P:
-                c = min(self.prefill_chunk, P - nx)
-                for j in range(c):
-                    kind = "final" if nx + j == P - 1 else "chunk"
-                    rows.append((s, int(r.prompt[nx + j]), nx + j, kind))
-            else:
-                rows.append((s, r.out[-1], int(self.pos[s]), "decode"))
-        for s in {row[0] for row in rows}:
-            self.kv.ensure_allocated(
-                s, max(p for sl, _, p, _ in rows if sl == s))
-        tables = jnp.asarray(self.kv.table_rows([row[0] for row in rows]))
-        toks = jnp.asarray([[t] for _, t, _, _ in rows], jnp.int32)
-        pos = jnp.asarray([p for _, _, p, _ in rows], jnp.int32)
-        eos = jnp.asarray(
-            [(-1 if (k != "decode" or self.active[s].eos is None)
-              else self.active[s].eos) for s, _, _, k in rows], jnp.int32)
-        tok, eos_hit, self.kv.pools, aux = self._pstep(
-            self.params, self.kv.pools, self._batch(toks), pos, tables, eos)
-        tok_np, eos_np = jax.device_get((tok, eos_hit))  # the ONE host sync
+        obs, i_step = self.obs, self._step_idx
+        obs.step_begin(i_step)
+        with obs.tracer.span("serve/step", step=i_step, active=n):
+            # assemble the step's token batch: per slot either its decode
+            # token or the next chunk of its prompt
+            with obs.tracer.span("serve/assemble"):
+                rows = []                   # (slot, token, position, kind)
+                for s in range(n):
+                    r = self.active[s]
+                    nx = int(self._prefill_next[s])
+                    P = len(r.prompt)
+                    if nx < P:
+                        c = min(self.prefill_chunk, P - nx)
+                        for j in range(c):
+                            kind = "final" if nx + j == P - 1 else "chunk"
+                            rows.append((s, int(r.prompt[nx + j]),
+                                         nx + j, kind))
+                    else:
+                        rows.append((s, r.out[-1], int(self.pos[s]),
+                                     "decode"))
+                for s in {row[0] for row in rows}:
+                    self.kv.ensure_allocated(
+                        s, max(p for sl, _, p, _ in rows if sl == s))
+                tables = jnp.asarray(
+                    self.kv.table_rows([row[0] for row in rows]))
+                toks = jnp.asarray([[t] for _, t, _, _ in rows], jnp.int32)
+                pos = jnp.asarray([p for _, _, p, _ in rows], jnp.int32)
+                eos = jnp.asarray(
+                    [(-1 if (k != "decode" or self.active[s].eos is None)
+                      else self.active[s].eos)
+                     for s, _, _, k in rows], jnp.int32)
+            with obs.tracer.span("serve/forward", tokens=len(rows)):
+                tok, eos_hit, self.kv.pools, aux = self._pstep(
+                    self.params, self.kv.pools, self._batch(toks), pos,
+                    tables, eos)
+            with obs.tracer.span("serve/host_sync"):   # the ONE host sync
+                tok_np, eos_np = jax.device_get((tok, eos_hit))
+            # one stamp shared by every token this step produced (they
+            # all come from the same forward)
+            t_now = self._clock()
 
-        decode_row: Dict[int, int] = {}
-        chunks = np.zeros(n, np.int64)
-        for i, (s, _t, _p, kind) in enumerate(rows):
-            self._last_aux[self.active[s].rid] = aux
-            if kind == "decode":
-                self.active[s].out.append(int(tok_np[i]))
-                self.pos[s] += 1
-                decode_row[s] = i
-            else:
-                chunks[s] += 1
-                if kind == "final":       # prompt complete: first token
-                    self.active[s].out.append(int(tok_np[i]))
-        for s in np.nonzero(chunks)[0]:
-            self._prefill_next[s] += chunks[s]
-            self.pos[s] += chunks[s]
-            self._prefill_forwards[s] += 1
-            self.kv.register_filled(int(s), self.active[s].prompt,
-                                    int(self._prefill_next[s]))
-        # retire top-down so compaction (move-last-into-freed) never moves
-        # a slot we still have to examine
-        n_decode = len(decode_row)
-        for s in range(n - 1, -1, -1):
-            if s not in decode_row:
-                continue
-            r = self.active[s]
-            if bool(eos_np[decode_row[s]]) or len(r.out) >= r.max_new \
-                    or self.pos[s] >= self.capacity - 1:
-                self._retire(s, decode_batch=n_decode)
+            with obs.tracer.span("serve/postprocess"):
+                decode_row: Dict[int, int] = {}
+                chunks = np.zeros(n, np.int64)
+                for i, (s, _t, _p, kind) in enumerate(rows):
+                    self._last_aux[self.active[s].rid] = aux
+                    if kind == "decode":
+                        self.active[s].out.append(int(tok_np[i]))
+                        self.pos[s] += 1
+                        decode_row[s] = i
+                        self._timing[self.active[s].rid].on_token(t_now)
+                    else:
+                        chunks[s] += 1
+                        if kind == "final":   # prompt complete: 1st token
+                            self.active[s].out.append(int(tok_np[i]))
+                            self._timing[
+                                self.active[s].rid].on_token(t_now)
+                for s in np.nonzero(chunks)[0]:
+                    self._prefill_next[s] += chunks[s]
+                    self.pos[s] += chunks[s]
+                    self._prefill_forwards[s] += 1
+                    self.kv.register_filled(int(s), self.active[s].prompt,
+                                            int(self._prefill_next[s]))
+                # retire top-down so compaction (move-last-into-freed)
+                # never moves a slot we still have to examine
+                n_decode = len(decode_row)
+                for s in range(n - 1, -1, -1):
+                    if s not in decode_row:
+                        continue
+                    r = self.active[s]
+                    if bool(eos_np[decode_row[s]]) \
+                            or len(r.out) >= r.max_new \
+                            or self.pos[s] >= self.capacity - 1:
+                        self._retire(s, decode_batch=n_decode)
+        self._end_step(i_step, tokens=len(rows))
         return len(rows)
+
+    def _end_step(self, i_step: int, *, tokens: int) -> None:
+        """Close the step's observability bracket: straggler window,
+        per-step counters, KV-pool occupancy gauges."""
+        obs = self.obs
+        obs.step_end(i_step)
+        self._step_idx += 1
+        if obs.enabled:
+            obs.metrics.inc("serve/steps")
+            obs.metrics.inc("serve/step_tokens", tokens)
+            if self.paged:
+                st = self.kv.stats()
+                for k in ("blocks_total", "blocks_in_use",
+                          "blocks_parked"):
+                    obs.metrics.set_gauge(f"kv/{k}", st[k])
 
     # -- contiguous (pre-paging fallback) ------------------------------
     def _step_contig(self) -> int:
         n = self.n_active
         if n == 0:
             return 0
-        reqs = self.active[:n]
-        last = jnp.asarray([[r.out[-1]] for r in reqs], jnp.int32)   # (n, 1)
-        pos = jnp.asarray(self.pos[:n], jnp.int32)                   # (n,)
-        eos = jnp.asarray([-1 if r.eos is None else r.eos for r in reqs],
-                          jnp.int32)
-        fn = self._decode_steps.get(n)
-        if fn is None:
-            fn = self._decode_steps[n] = make_slot_decode_step(
-                self.cfg, self.rc, n)
-        tok, eos_hit, self.cache, aux = fn(
-            self.params, self.cache, self._batch(last), pos, eos)
-        tok_np, eos_np = jax.device_get((tok, eos_hit))  # the ONE host sync
-        for s, r in enumerate(reqs):
-            r.out.append(int(tok_np[s]))
-            self.pos[s] += 1
-            self._last_aux[r.rid] = aux
-        # retire top-down so the swap-with-last compaction never moves a
-        # slot we still have to examine
-        for s in range(n - 1, -1, -1):
-            r = self.active[s]
-            if bool(eos_np[s]) or len(r.out) >= r.max_new \
-                    or self.pos[s] >= self.capacity - 1:
-                self._retire(s, decode_batch=n)
+        obs, i_step = self.obs, self._step_idx
+        obs.step_begin(i_step)
+        with obs.tracer.span("serve/step", step=i_step, active=n):
+            with obs.tracer.span("serve/assemble"):
+                reqs = self.active[:n]
+                last = jnp.asarray([[r.out[-1]] for r in reqs],
+                                   jnp.int32)                    # (n, 1)
+                pos = jnp.asarray(self.pos[:n], jnp.int32)       # (n,)
+                eos = jnp.asarray([-1 if r.eos is None else r.eos
+                                   for r in reqs], jnp.int32)
+                fn = self._decode_steps.get(n)
+                if fn is None:
+                    fn = self._decode_steps[n] = make_slot_decode_step(
+                        self.cfg, self.rc, n, self.obs)
+            with obs.tracer.span("serve/forward", tokens=n):
+                tok, eos_hit, self.cache, aux = fn(
+                    self.params, self.cache, self._batch(last), pos, eos)
+            with obs.tracer.span("serve/host_sync"):   # the ONE host sync
+                tok_np, eos_np = jax.device_get((tok, eos_hit))
+            t_now = self._clock()
+            with obs.tracer.span("serve/postprocess"):
+                for s, r in enumerate(reqs):
+                    r.out.append(int(tok_np[s]))
+                    self.pos[s] += 1
+                    self._last_aux[r.rid] = aux
+                    self._timing[r.rid].on_token(t_now)
+                # retire top-down so the swap-with-last compaction never
+                # moves a slot we still have to examine
+                for s in range(n - 1, -1, -1):
+                    r = self.active[s]
+                    if bool(eos_np[s]) or len(r.out) >= r.max_new \
+                            or self.pos[s] >= self.capacity - 1:
+                        self._retire(s, decode_batch=n)
+        self._end_step(i_step, tokens=n)
         return n
 
     # ------------------------------------------------------------------
     def _retire(self, s: int, *, decode_batch: int) -> None:
         """Free slot ``s``: materialize telemetry, keep the active prefix
         contiguous (paged: host-side table move + block refcount release;
-        contiguous: device row swap)."""
+        contiguous: device row swap).
+
+        ``Request.stats`` leaves with ONE schema across both engines
+        (asserted in tests/test_obs.py): the step plan's aux (``sched/*``
+        when MoE stats are on), the ``serve/*`` engine counters —
+        ``decode_batch``, ``prefill_forwards`` (contiguous: always 1.0,
+        the whole-prompt admission prefill), ``prefix_hit_tokens``
+        (contiguous: always 0.0, no prefix index) — and the ``lat/*``
+        latency family (obs/latency.py)."""
         req = self.active[s]
         req.stats = {k: float(v)
                      for k, v in self._last_aux.pop(req.rid).items()}
@@ -303,15 +421,32 @@ class ServeEngine:
             self._prefix_hit[last] = 0
             self._prefill_forwards[last] = 0
         else:
+            req.stats["serve/prefix_hit_tokens"] = 0.0
+            req.stats["serve/prefill_forwards"] = 1.0
             if s != last:
                 self.cache = self._swap(self.cache, jnp.int32(s),
                                         jnp.int32(last))
                 self.active[s] = self.active[last]
                 self.pos[s] = self.pos[last]
+        tl = self._timing.pop(req.rid, None)
+        if tl is not None:
+            req.stats.update(tl.finalize(end=self._clock()))
         req.done = True
         self.active[last] = None
         self.pos[last] = 0
         self.n_active -= 1
+        obs = self.obs
+        obs.tracer.instant("serve/retire", rid=req.rid)
+        if obs.enabled:
+            m = obs.metrics
+            m.inc("serve/completed")
+            for key in ("ttft_s", "tpot_s", "queue_wait_s", "e2e_s"):
+                if f"lat/{key}" in req.stats:
+                    m.observe(f"serve/{key}", req.stats[f"lat/{key}"])
+            # absorb the retirement-time plan stats (summed over the MoE
+            # layers of the request's final step) as histogram samples
+            m.observe_many("", {k: v for k, v in req.stats.items()
+                                if k.startswith("sched/")})
 
     def run(self, requests: List[Request], max_steps: int = 512):
         """Drive admission + decode until done (or the step budget runs
@@ -323,6 +458,9 @@ class ServeEngine:
         re-prefilled, but active slots keep decoding."""
         live = {id(r) for r in self.active if r is not None}
         pending = [r for r in requests if not r.done and id(r) not in live]
+        t_submit = self._clock()
+        for r in pending:       # queue-wait origin; resumption keeps the
+            self._submit.setdefault(r.rid, t_submit)   # original stamp
         self.dropped = []
         for _ in range(max_steps):
             while pending and self.n_active < self.slots:
@@ -331,4 +469,8 @@ class ServeEngine:
             if self.step() == 0 and not pending:
                 break
         self.dropped = [r for r in requests if not r.done]
+        if self.dropped:
+            self.obs.metrics.inc("serve/dropped", len(self.dropped))
+            self.obs.tracer.instant("serve/step_budget_exhausted",
+                                    dropped=len(self.dropped))
         return [r for r in requests if r.done]

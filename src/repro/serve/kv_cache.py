@@ -101,10 +101,23 @@ class PagedKVCache:
         self._chain: Dict[int, tuple] = {}
         self.hits = self.misses = self.evictions = 0
         self.hit_tokens = 0
+        # observability sinks (repro.obs; null by default — bind_obs()):
+        # block alloc/evict/compaction become counters + trace instants
+        from repro.obs import NULL_METRICS, NULL_TRACER
+        self._metrics = NULL_METRICS
+        self._tracer = NULL_TRACER
+
+    def bind_obs(self, metrics, tracer) -> None:
+        """Attach metrics/tracer sinks (the engine binds its bundle).
+        Pool events are host-side control-plane work, so instrumenting
+        them never touches the traced step."""
+        self._metrics = metrics
+        self._tracer = tracer
 
     # -- allocation ----------------------------------------------------
     def _alloc_block(self) -> int:
         if self.free:
+            self._metrics.inc("kv/blocks_allocated")
             return self.free.pop()
         if not self._cached_free:
             raise RuntimeError("paged pool exhausted — broken refcounting "
@@ -113,6 +126,9 @@ class PagedKVCache:
         digest = self._block_hash.pop(b)
         del self._hash_to_block[digest]
         self.evictions += 1
+        self._metrics.inc("kv/blocks_allocated")
+        self._metrics.inc("kv/evictions")
+        self._tracer.instant("kv/evict", block=b)
         return b
 
     def ensure_allocated(self, slot: int, last_pos: int) -> None:
@@ -145,22 +161,27 @@ class PagedKVCache:
         digest = b""
         n_hit = 0
         if self.prefix_cache:
-            for i in range(max_full):
-                nxt = _chain_digest(digest, prompt[i * bs:(i + 1) * bs])
-                b = self._hash_to_block.get(nxt)
-                if b is None:
-                    self.misses += 1
-                    break
-                digest = nxt
-                if self.refcount[b] == 0:               # revive parked block
-                    self._cached_free.pop(b)
-                self.refcount[b] += 1
-                self.tables[slot, i] = b
-                self.n_alloc[slot] += 1
-                self.hits += 1
-                n_hit = i + 1
+            with self._tracer.span("serve/prefix_probe", slot=slot,
+                                   prompt_tokens=len(prompt)):
+                for i in range(max_full):
+                    nxt = _chain_digest(digest, prompt[i * bs:(i + 1) * bs])
+                    b = self._hash_to_block.get(nxt)
+                    if b is None:
+                        self.misses += 1
+                        self._metrics.inc("kv/prefix_misses")
+                        break
+                    digest = nxt
+                    if self.refcount[b] == 0:           # revive parked block
+                        self._cached_free.pop(b)
+                    self.refcount[b] += 1
+                    self.tables[slot, i] = b
+                    self.n_alloc[slot] += 1
+                    self.hits += 1
+                    self._metrics.inc("kv/prefix_hits")
+                    n_hit = i + 1
         self._chain[slot] = (n_hit, digest)
         self.hit_tokens += n_hit * bs
+        self._metrics.inc("kv/prefix_hit_tokens", n_hit * bs)
         return n_hit * bs
 
     def probe_prefix(self, prompt: np.ndarray) -> int:
@@ -226,6 +247,8 @@ class PagedKVCache:
             del self._chain[dst]
         self.tables[src] = 0
         self.n_alloc[src] = 0
+        self._metrics.inc("kv/compactions")
+        self._tracer.instant("kv/compaction", src=src, dst=dst)
 
     def table_rows(self, slot_ids) -> np.ndarray:
         """(len(slot_ids), blocks_per_slot) int32 rows for a step batch."""

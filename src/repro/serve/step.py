@@ -12,6 +12,15 @@ Two families live here:
   Python int baked into the jitted step: each distinct active-slot count
   compiles once (bounded by the slot count), exactly like bucketed batch
   sizes in production engines.
+
+Observability (repro.obs): the slot/paged constructors accept an
+``Observability`` bundle and call ``obs.on_trace(...)`` INSIDE the step
+body — python executes there only while jax traces, so the call fires
+exactly once per distinct compiled shape, turning recompile events into
+trace instants + a ``serve/recompiles`` counter.  It records host-static
+facts only (shapes) and inserts no ops into the traced computation:
+compiled artifacts and greedy tokens are bitwise-identical with
+observability on or off (tests/test_obs.py).
 """
 from __future__ import annotations
 
@@ -21,6 +30,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models.lm import (RunConfig, forward, slice_cache_slots,
                              update_cache_slots)
+from repro.obs import NOOP
 
 
 def make_prefill_step(cfg: ModelConfig, rc: RunConfig):
@@ -51,7 +61,7 @@ def make_forward_only(cfg: ModelConfig, rc: RunConfig):
 # ----------------------------------------------------------------------
 # Slot steps over the batched serving cache
 # ----------------------------------------------------------------------
-def make_slot_prefill_step(cfg: ModelConfig, rc: RunConfig):
+def make_slot_prefill_step(cfg: ModelConfig, rc: RunConfig, obs=None):
     """Prefill one request into slot row ``slot`` of the batched cache.
 
     Returns jitted ``(params, cache, batch, slot) -> (tok, cache', aux)``:
@@ -64,7 +74,11 @@ def make_slot_prefill_step(cfg: ModelConfig, rc: RunConfig):
     anyway, but recurrent state (rwkv shift/state, ssm conv/state) has no
     position masking and would otherwise leak from the row's retired
     previous occupant into the new request."""
+    obs = obs or NOOP
+
     def prefill_step(params, cache, batch, slot):
+        obs.on_trace("prefill_step",
+                     prompt_tokens=int(batch["tokens"].shape[-1]))
         sub = jax.tree.map(jnp.zeros_like, slice_cache_slots(cache, slot, 1))
         logits, new_sub, aux = forward(params, cfg, rc, batch,
                                        mode="prefill", cache=sub)
@@ -76,7 +90,7 @@ def make_slot_prefill_step(cfg: ModelConfig, rc: RunConfig):
     return jax.jit(prefill_step)
 
 
-def make_paged_step(cfg: ModelConfig, rc: RunConfig):
+def make_paged_step(cfg: ModelConfig, rc: RunConfig, obs=None):
     """ONE step function for the paged engine: decode tokens and prefill-
     chunk tokens ride in the SAME token batch, so every MoE layer builds a
     single DispatchPlan covering all of them.
@@ -90,7 +104,10 @@ def make_paged_step(cfg: ModelConfig, rc: RunConfig):
     specializes per distinct T (decode-only steps reuse T = n_active,
     bounded by slots; chunk steps add one shape per distinct chunk
     layout)."""
+    obs = obs or NOOP
+
     def paged_step(params, pools, batch, pos, tables, eos):
+        obs.on_trace("paged_step", tokens=int(batch["tokens"].shape[0]))
         logits, pools, aux = forward(params, cfg, rc, batch, mode="decode",
                                      cache=pools, pos=pos,
                                      block_tables=tables)
@@ -99,7 +116,8 @@ def make_paged_step(cfg: ModelConfig, rc: RunConfig):
     return jax.jit(paged_step)
 
 
-def make_slot_decode_step(cfg: ModelConfig, rc: RunConfig, n: int):
+def make_slot_decode_step(cfg: ModelConfig, rc: RunConfig, n: int,
+                          obs=None):
     """One decode step for the ``n`` active slots (prefix rows [0, n)).
 
     Returns jitted ``(params, cache, batch, pos, eos) -> (tok, eos_hit,
@@ -108,7 +126,10 @@ def make_slot_decode_step(cfg: ModelConfig, rc: RunConfig, n: int):
     layer plans/dispatches the n decode tokens together — and both the
     argmax and the EOS comparison stay on device: the engine performs a
     single host transfer per step."""
+    obs = obs or NOOP
+
     def decode_step(params, cache, batch, pos, eos):
+        obs.on_trace("decode_step", active_slots=n)
         sub = slice_cache_slots(cache, 0, n)
         logits, new_sub, aux = forward(params, cfg, rc, batch,
                                        mode="decode", cache=sub, pos=pos)
