@@ -72,7 +72,8 @@ def run_cell(cfg, params, *, slots: int, policy: str, executor: str,
     return {"slots": slots, "policy": policy, "executor": executor,
             "quant": quant, "steps": steps, "s_per_step": s_per_step,
             "tok_per_s": tok_per_s, "kv_block": eng.kv_block_size,
-            "kv_stats": eng.kv.stats() if eng.paged else None}
+            "kv_stats": eng.kv.stats() if eng.paged else None,
+            "config": eng.describe(seed=0)}
 
 
 # ----------------------------------------------------------------------
@@ -147,6 +148,7 @@ def run_workload_cell(cfg, params, *, mode: str, executor: str, slots: int,
            "tok_per_s": (decode_tokens + resident_tokens) / dt,
            "latency": latency_summary(reqs),
            "kv_stats": eng.kv.stats() if eng.paged else None,
+           "config": eng.describe(seed=0),
            "outputs": {r.rid: r.out for r in reqs}}
     emit(f"workload_{mode}", dt / max(forwards, 1),
          f"resident_tok_per_fwd={rec['decode_tok_per_forward']:.2f}")

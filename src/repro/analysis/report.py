@@ -73,22 +73,47 @@ def scheduling_table():
     return "\n".join(rows)
 
 
-def serving_table():
-    """Per-request latency + paged-cache telemetry from
-    benchmarks/serving_throughput.py (results/serve/*.json): the shared-
-    prefix workload cells carry TTFT/TPOT aggregates (nearest-rank
-    p50/p99 over retired requests, repro.obs.latency) and the final
-    ``PagedKVCache.stats()`` snapshot."""
+def _load_serve_docs(name_filter):
     serve_dir = ROOT / "results" / "serve"
     docs = []
     if serve_dir.exists():
         for p in sorted(serve_dir.glob("*.json")):
+            if not name_filter(p.name):
+                continue
             try:
                 d = json.loads(p.read_text())
             except (json.JSONDecodeError, UnicodeDecodeError):
                 continue
             if isinstance(d, dict) and "records" in d:
                 docs.append(d)
+    return docs
+
+
+def _cfg_str(c):
+    """Compact self-describing cell config (the ``config`` block every
+    results/serve record carries: ServeEngine.describe)."""
+    if not c:
+        return "—"
+    seed = c.get("seed")
+    return (f"{c.get('executor', '?')}/{c.get('schedule_policy', '?')}"
+            f"/q:{c.get('quant', 'none')} adm={c.get('admission', '?')} "
+            f"kvb={c.get('kv_block_size')} pc={c.get('prefill_chunk')}"
+            + (f" seed={seed}" if seed is not None else ""))
+
+
+def _ms(agg):
+    return (f"{agg['p50'] * 1e3:.1f} / {agg['p99'] * 1e3:.1f}"
+            if agg else "—")
+
+
+def serving_table():
+    """Per-request latency + paged-cache telemetry from
+    benchmarks/serving_throughput.py (results/serve/*.json): the shared-
+    prefix workload cells carry TTFT/TPOT aggregates (nearest-rank
+    p50/p99 over retired requests, repro.obs.latency), the final
+    ``PagedKVCache.stats()`` snapshot, and the self-describing cell
+    config."""
+    docs = _load_serve_docs(lambda n: not n.startswith("loadgen_"))
     cells = [(d.get("arch", "?"), r) for d in docs
              for r in d.get("shared_prefix") or []]
     if not cells:
@@ -96,22 +121,54 @@ def serving_table():
                 "benchmarks.serving_throughput`` to populate "
                 "results/serve/)_")
 
-    def ms(agg):
-        return (f"{agg['p50'] * 1e3:.1f} / {agg['p99'] * 1e3:.1f}"
-                if agg else "—")
-
     rows = ["| arch | mode | tok/s | TTFT p50/p99 ms | TPOT p50/p99 ms | "
-            "queue p50/p99 ms | kv in-use/total | prefix hit tok |",
-            "|" + "---|" * 8]
+            "queue p50/p99 ms | kv in-use/total | prefix hit tok | "
+            "config |",
+            "|" + "---|" * 9]
     for arch, r in cells:
         lat = r.get("latency") or {}
         kv = r.get("kv_stats")
         rows.append(
             f"| {arch} | {r['mode']} | {r['tok_per_s']:.1f} | "
-            f"{ms(lat.get('ttft_s'))} | {ms(lat.get('tpot_s'))} | "
-            f"{ms(lat.get('queue_wait_s'))} | "
+            f"{_ms(lat.get('ttft_s'))} | {_ms(lat.get('tpot_s'))} | "
+            f"{_ms(lat.get('queue_wait_s'))} | "
             + (f"{kv['blocks_in_use']}/{kv['blocks_total']} | "
-               f"{kv['prefix_hit_tokens']} |" if kv else "— | — |"))
+               f"{kv['prefix_hit_tokens']} | " if kv else "— | — | ")
+            + f"{_cfg_str(r.get('config'))} |")
+    return "\n".join(rows)
+
+
+def loadgen_table():
+    """Goodput under SLO from benchmarks/serve_loadgen.py
+    (results/serve/loadgen_*.json): every cell is one seeded arrival
+    trace replayed on virtual time through the open-stream front-end
+    under one admission policy."""
+    docs = _load_serve_docs(lambda n: n.startswith("loadgen_"))
+    cells = [(d.get("arch", "?"), r) for d in docs
+             for r in d.get("records") or []]
+    if not cells:
+        return ("_(no records — run ``PYTHONPATH=src python -m "
+                "benchmarks.serve_loadgen`` to populate "
+                "results/serve/loadgen_*.json)_")
+    rows = ["| arch | pattern | admission | done/offered | goodput req/s | "
+            "SLO attain | TTFT p50/p99 s | TPOT p50/p99 s | pre/res | "
+            "config |",
+            "|" + "---|" * 10]
+
+    def s(v):
+        return f"{v:.2f}" if v is not None else "—"
+
+    for arch, r in sorted(cells, key=lambda c: (c[0], c[1].get("pattern")
+                                                or "?")):
+        cfg = dict(r.get("config") or {})
+        adm = cfg.get("admission", "?")
+        rows.append(
+            f"| {arch} | {r.get('pattern', '?')} | {adm} | "
+            f"{r['completed']}/{r['offered']} | "
+            f"{r['goodput_rps']:.3f} | {r['slo_attainment']:.2f} | "
+            f"{s(r.get('ttft_p50_s'))} / {s(r.get('ttft_p99_s'))} | "
+            f"{s(r.get('tpot_p50_s'))} / {s(r.get('tpot_p99_s'))} | "
+            f"{r['preempted']}/{r['resumed']} | {_cfg_str(cfg)} |")
     return "\n".join(rows)
 
 
@@ -146,6 +203,7 @@ def main():
         n_ok=len(ok), n_skip=len(skips),
         sched=scheduling_table(),
         serving=serving_table(),
+        loadgen=loadgen_table(),
         dryrun=dryrun_table(dr),
         roofline=markdown_table(sorted(
             rl1, key=lambda r: (r.arch, r.shape))),
@@ -237,6 +295,19 @@ aggregated to nearest-rank p50/p99.  The shared-prefix workload
 alongside the run-final paged-cache counters:
 
 {serving}
+
+## §Goodput under SLO (beyond-paper; DESIGN.md §11)
+
+The open-stream front-end (repro.serve.frontend) serves seeded arrival
+traces replayed on VIRTUAL time (one engine step = one fixed virtual
+tick), so goodput — completions that met their TTFT/TPOT deadlines, per
+second — is a pure function of (trace seed, cell config).  ``slo``
+admission orders by deadline feasibility and preempts requests that
+already lost their own SLO (paged: host-side table park, KV pinned;
+contiguous: resume re-prefills), but only while a feasible
+deadline-holder waits:
+
+{loadgen}
 
 ## §Dry-run
 

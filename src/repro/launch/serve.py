@@ -60,7 +60,29 @@ def main():
     ap.add_argument("--admission", default="fcfs",
                     choices=available_admission_policies(),
                     help="which pending request gets a freed slot "
-                         "(fcfs, sjf = shortest prompt, prefix_hit = warmest cached prefix)")
+                         "(fcfs, sjf = shortest prompt, prefix_hit = "
+                         "warmest cached prefix, slo = TTFT-deadline "
+                         "feasibility with preemption)")
+    ap.add_argument("--stream", action="store_true",
+                    help="serve through the open-stream front-end "
+                         "(repro.serve.frontend) and print each token as "
+                         "the step's host sync retires it — streamed "
+                         "sequences are bitwise-identical to the closed-"
+                         "batch run")
+    ap.add_argument("--slo-ttft", type=float, default=None, metavar="S",
+                    help="per-request time-to-first-token deadline "
+                         "(seconds); pair with --admission slo")
+    ap.add_argument("--slo-tpot", type=float, default=None, metavar="S",
+                    help="per-request time-per-output-token budget "
+                         "(seconds); pair with --admission slo")
+    ap.add_argument("--loadgen", default=None, metavar="PATTERN",
+                    help="replay a seeded arrival trace (poisson | burst "
+                         "| shared_prefix | longtail) on VIRTUAL time "
+                         "through the front-end instead of a closed "
+                         "batch; writes the goodput artifact to "
+                         "results/serve/loadgen_<arch>[_smoke].json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="with --loadgen: tiny trace for CI")
     ap.add_argument("--trace", nargs="?", const="results/trace/serve.json",
                     default=None, metavar="PATH",
                     help="write a Chrome-trace/Perfetto JSON of the step "
@@ -88,8 +110,11 @@ def main():
 
     from repro.configs import get_config, reduced
     from repro.models import RunConfig, init_params
-    from repro.obs import NOOP, Observability, device_trace, latency_summary
+    from repro.obs import (NOOP, Observability, device_trace, drop_summary,
+                           latency_summary)
     from repro.serve.engine import Request, ServeEngine
+    from repro.serve.frontend import ServingFrontend
+    from repro.serve.loadgen import make_virtual_obs, replay, synth_trace
 
     cfg = get_config(args.arch)
     if args.reduce:
@@ -109,9 +134,13 @@ def main():
         print(f"routed experts quantized under scheme {quant!r} "
               f"(serving layout)")
 
-    obs = (Observability.memory()
-           if (args.trace or args.metrics_out or args.device_trace)
-           else NOOP)
+    if args.loadgen:
+        clock, obs = make_virtual_obs(enabled=True)
+    else:
+        clock = None
+        obs = (Observability.memory()
+               if (args.trace or args.metrics_out or args.device_trace)
+               else NOOP)
     engine = ServeEngine(cfg, params, slots=args.slots,
                          capacity=args.capacity, admission=args.admission,
                          kv_block_size=args.kv_block_size,
@@ -130,16 +159,60 @@ def main():
     else:
         print("contiguous KV cache (non-pageable family or "
               "--kv-block-size 0)")
+    if args.loadgen:
+        import json
+        import pathlib
+
+        n = 12 if args.smoke else 24
+        trace = synth_trace(args.loadgen, seed=0, n=n, rate=8.0,
+                            vocab=cfg.vocab_size, max_new=args.max_new,
+                            slo_ttft=args.slo_ttft if args.slo_ttft
+                            is not None else 0.4,
+                            slo_tpot=args.slo_tpot,
+                            burst_size=6, prompt_hi=40)
+        rec = replay(engine, trace, clock=clock, step_time=0.05, seed=0,
+                     pattern=args.loadgen,
+                     max_steps=min(args.max_steps, 1024))
+        rec.pop("outputs", None)
+        out_path = pathlib.Path("results/serve")
+        out_path.mkdir(parents=True, exist_ok=True)
+        out_path = out_path / (f"loadgen_{args.arch}"
+                               f"{'_smoke' if args.smoke else ''}.json")
+        out_path.write_text(json.dumps(
+            {"arch": args.arch, "reduced": args.reduce,
+             "virtual_time": True, "records": [rec]}, indent=1))
+        print(f"loadgen {args.loadgen}: {rec['completed']}/"
+              f"{rec['n_requests']} completed, goodput "
+              f"{rec['goodput_rps']:.3f} req/s, attainment "
+              f"{rec['slo_attainment']:.2f}, preempted {rec['preempted']}, "
+              f"resumed {rec['resumed']}, TTFT p50 "
+              f"{rec['ttft_p50_s']} s")
+        print(f"loadgen artifact -> {out_path}")
+        return
+
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab_size,
                                         rng.integers(3, 9)).astype(np.int32),
-                    max_new=args.max_new)
+                    max_new=args.max_new,
+                    slo_ttft=args.slo_ttft, slo_tpot=args.slo_tpot)
             for i in range(args.requests)]
     bracket = (device_trace(args.device_trace) if args.device_trace
                else contextlib.nullcontext())
     with bracket:
-        done = engine.run(reqs, max_steps=args.max_steps)
+        if args.stream:
+            fe = ServingFrontend(engine)
+            handles = [fe.submit(r.prompt, max_new=r.max_new, rid=r.rid,
+                                 slo_ttft=r.slo_ttft, slo_tpot=r.slo_tpot,
+                                 on_token=lambda req, tok:
+                                 print(f"  stream rid={req.rid} "
+                                       f"tok[{len(req.out) - 1}]={tok}"))
+                       for r in reqs]
+            done = fe.drain(max_steps=args.max_steps)
+            reqs = handles
+            engine.dropped = [r for r in reqs if not r.done]
+        else:
+            done = engine.run(reqs, max_steps=args.max_steps)
     for r in reqs:
         tag = "" if r.done else "  [INCOMPLETE: step budget exhausted]"
         print(f"req {r.rid}: {r.prompt.tolist()} -> {r.out}{tag}")
@@ -151,8 +224,10 @@ def main():
                       f"{int(r.stats.get('serve/decode_batch', 1))} slot(s), "
                       f"summed over moe layers): {sched}")
     print(f"{len(done)}/{len(reqs)} requests completed")
-    lat = latency_summary(reqs)
-    if lat:
+    # completion percentiles over COMPLETED requests only — censored
+    # (dropped/preempted) stats are rolled up separately below
+    lat = latency_summary([r for r in reqs if r.done])
+    if any(lat.values()):
         for fam in ("ttft_s", "tpot_s", "queue_wait_s", "e2e_s"):
             agg = lat.get(fam)
             if agg:
@@ -161,11 +236,17 @@ def main():
                       f"p99 {agg['p99'] * 1e3:8.2f} ms  (n={agg['n']})")
     if engine.paged:
         print(f"paged-cache stats: {engine.kv.stats()}")
-    if engine.dropped:
-        print(f"WARNING: {len(engine.dropped)} request(s) dropped by the "
-              f"--max-steps={args.max_steps} budget "
-              f"(rids: {[r.rid for r in engine.dropped]}); partial outputs "
-              f"retained on Request.out")
+    drops = drop_summary(reqs)
+    if drops:
+        wait = drops["wait_s"]
+        tail = (f"; censored wait p50 {wait['p50'] * 1e3:.1f} ms"
+                if wait else "")
+        print(f"WARNING: {drops['n']} request(s) did not complete under "
+              f"--max-steps={args.max_steps} "
+              f"({drops['dropped']} dropped, {drops['preempted']} "
+              f"preempted-unresumed; rids {drops['rids']}); "
+              f"{drops['tokens_out']} partial token(s) retained on "
+              f"Request.out{tail}")
     if args.trace:
         path = engine.obs.tracer.save(args.trace)
         print(f"chrome trace ({len(engine.obs.tracer.events)} events) "

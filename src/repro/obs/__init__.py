@@ -34,7 +34,7 @@ import time
 from typing import Callable, Dict, Optional
 
 from repro.obs.latency import (LAT_KEYS, RequestTimeline, aggregate,
-                               latency_summary)
+                               drop_summary, latency_summary)
 from repro.obs.metrics import (NULL_METRICS, MetricsRegistry, NullMetrics,
                                percentile, summarize)
 from repro.obs.trace import (NULL_TRACER, NullTracer, SpanTracer,
@@ -43,7 +43,8 @@ from repro.obs.trace import (NULL_TRACER, NullTracer, SpanTracer,
 __all__ = [
     "Observability", "NOOP", "MetricsRegistry", "NullMetrics",
     "SpanTracer", "NullTracer", "RequestTimeline", "LAT_KEYS",
-    "aggregate", "latency_summary", "percentile", "summarize",
+    "aggregate", "drop_summary", "latency_summary", "percentile",
+    "summarize",
     "device_trace", "validate_chrome_trace", "register_sink", "get_sink",
     "available_sinks", "NULL_METRICS", "NULL_TRACER",
 ]

@@ -85,6 +85,12 @@ def latency_summary(requests) -> dict:
 
         {"ttft_s": {"n", "mean", "p50", "p99"}, "tpot_s": {...},
          "queue_wait_s": {...}, "e2e_s": {...}}
+
+    Any request carrying ``lat/*`` stats contributes — including dropped
+    or preempted-unfinished requests, whose CENSORED stats the engine
+    finalizes at drop time (``ServeEngine.finalize_drops``).  Callers
+    reporting completion latencies should pass only completed requests
+    and report the censored remainder via ``drop_summary``.
     """
     done = [r for r in requests if getattr(r, "stats", None)]
     out = {}
@@ -92,3 +98,29 @@ def latency_summary(requests) -> dict:
         out[key] = aggregate([r.stats[f"lat/{key}"] for r in done
                               if f"lat/{key}" in r.stats])
     return out
+
+
+def drop_summary(requests) -> Optional[dict]:
+    """Roll up requests that never completed (dropped at the step budget
+    or preempted without resume).  Their ``lat/*`` stats are censored —
+    stamped finite at drop time, measuring time spent, not time to
+    completion — so they are reported HERE instead of polluting the
+    completion percentiles.  None when every request finished, so
+    consumers gate on truthiness (the all-dropped serve run used to
+    print nothing at all)."""
+    undone = [r for r in requests
+              if not getattr(r, "done", False) and getattr(r, "stats", None)]
+    if not undone:
+        return None
+    return {
+        "n": len(undone),
+        "dropped": sum(1 for r in undone
+                       if r.stats.get("serve/dropped", 0.0)),
+        "preempted": sum(1 for r in undone
+                         if r.stats.get("serve/preempted", 0.0)),
+        "rids": [r.rid for r in undone],
+        "tokens_out": int(sum(r.stats.get("lat/decode_tokens", 0.0)
+                              for r in undone)),
+        "wait_s": aggregate([r.stats["lat/e2e_s"] for r in undone
+                             if "lat/e2e_s" in r.stats]),
+    }

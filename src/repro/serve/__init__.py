@@ -1,9 +1,16 @@
 """repro.serve subpackage: batched continuous-batching serving.
 
 engine.py    — ServeEngine: one decode dispatch per step across all slots
-admission.py — pluggable admission policies (fcfs / sjf)
+admission.py — pluggable admission policies (fcfs / sjf / prefix_hit / slo)
+kv_cache.py  — paged KV cache: block pool, prefix cache, parked tables
+frontend.py  — open-stream front-end: submit()/poll() + token streaming
+loadgen.py   — trace-driven load generator: goodput under SLO
 step.py      — jitted prefill/decode steps (single-sequence + slot-row)
 """
 from repro.serve.admission import (available_admission_policies,  # noqa: F401
                                    get_admission, register_admission)
 from repro.serve.engine import Request, ServeEngine  # noqa: F401
+from repro.serve.frontend import ServingFrontend  # noqa: F401
+from repro.serve.loadgen import (PATTERNS, TraceEvent,  # noqa: F401
+                                 VirtualClock, make_virtual_obs, replay,
+                                 synth_trace)

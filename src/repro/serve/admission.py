@@ -21,11 +21,29 @@ only its slot's cache row).
                     already in the prefix-cache index, so warm requests
                     ride their shared blocks before eviction can claim
                     them; ties (including every request on a cold cache,
-                    or the contiguous engine) fall back to FCFS.
+                    or the contiguous engine) fall back to FCFS.  Probes
+                    are memoized per rid until the prefix pool mutates —
+                    re-probing every scheduling pass used to re-hash
+                    every pending prompt from scratch.
+* ``slo``         — TTFT-deadline feasibility (MoE-Inference-Bench
+                    framing: goodput under SLO, not raw throughput).
+                    Pending requests that can still meet their TTFT
+                    deadline are admitted earliest-deadline-first;
+                    no-deadline requests follow; deadline-blown requests
+                    go last (work-conserving: served only when nothing
+                    at-risk waits).  The policy also exposes the
+                    ``preempt`` hook the engine's scheduling pass calls:
+                    active requests that blew their TTFT deadline before
+                    producing a first token, or whose running TPOT is
+                    over budget, are preempted (paged: host-side table
+                    park; contiguous: resume re-prefills) — but only
+                    while a feasible deadline-holder is waiting for the
+                    slot, so preemption never burns work speculatively.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Sequence
+import math
+from typing import Callable, Dict, List, Sequence
 
 AdmissionPolicy = Callable[..., int]
 
@@ -63,9 +81,100 @@ def shortest_prompt_first(pending: Sequence, *, engine=None) -> int:
 @register_admission("prefix_hit")
 def most_cached_prefix_first(pending: Sequence, *, engine=None) -> int:
     """Longest currently-cached prefix wins; FCFS tie-break.  Falls back
-    to FCFS when no paged prefix index is available."""
+    to FCFS when no paged prefix index is available.  Probes memoize per
+    rid inside the cache (invalidated when the hash index mutates), so a
+    stable queue costs one chained-sha256 walk per request, not one per
+    scheduling pass."""
     kv = getattr(engine, "kv", None)
     if kv is None or not getattr(kv, "prefix_cache", False):
         return 0
     return min(range(len(pending)),
-               key=lambda i: (-kv.probe_prefix(pending[i].prompt), i))
+               key=lambda i: (-kv.probe_prefix(pending[i].prompt,
+                                               memo_key=pending[i].rid), i))
+
+
+# ----------------------------------------------------------------------
+# SLO-aware admission + preemption (the serving front-end's policy)
+# ----------------------------------------------------------------------
+def _prefill_steps(engine, prompt) -> int:
+    """Engine steps from slot claim to first token for ``prompt``."""
+    if engine is None or not getattr(engine, "paged", False):
+        return 1                       # contiguous: one admission prefill
+    kv = engine.kv
+    cached = kv.probe_prefix(prompt, memo_key=None) if kv.prefix_cache \
+        else 0
+    todo = max(1, len(prompt) - cached)   # >= 1: final token always runs
+    return math.ceil(todo / engine.prefill_chunk)
+
+
+def _ttft_feasible(engine, req, now: float) -> bool:
+    """Can ``req`` still meet its TTFT deadline if admitted right now?"""
+    if req.slo_ttft is None:
+        return True
+    submit = engine._submit.get(req.rid, now)
+    est = _prefill_steps(engine, req.prompt) * engine.step_time_estimate()
+    return now + est <= submit + req.slo_ttft
+
+
+@register_admission("slo")
+def slo(pending: Sequence, *, engine=None) -> int:
+    """Earliest-feasible-TTFT-deadline first.
+
+    Rank groups: (0) deadline-holders that can still make it, by
+    deadline; (1) requests with no deadline, FCFS; (2) blown deadlines,
+    by deadline (work-conserving backfill).  Feasibility prices the
+    remaining prefill at the engine's measured (or hinted) step cost."""
+    if engine is None:
+        return 0
+    now = engine._clock()
+
+    def key(i):
+        r = pending[i]
+        if r.slo_ttft is None:
+            return (1, 0.0, i)
+        deadline = engine._submit.get(r.rid, now) + r.slo_ttft
+        return (0 if _ttft_feasible(engine, r, now) else 2, deadline, i)
+
+    return min(range(len(pending)), key=key)
+
+
+def _slo_preempt(engine, pending: Sequence) -> List[int]:
+    """Slots to preempt this scheduling pass (engine.schedule hook).
+
+    A victim is an active request that already lost its own SLO — TTFT
+    deadline unreachable with no first token out yet, or running TPOT
+    over budget — and preemption is throttled to the number of FEASIBLE
+    deadline-holders waiting, so an empty (or hopeless) queue never
+    triggers it."""
+    if engine is None or engine.n_active < engine.slots:
+        return []                      # a free slot exists: just admit
+    now = engine._clock()
+    demand = sum(1 for r in pending
+                 if r.slo_ttft is not None
+                 and _ttft_feasible(engine, r, now))
+    if demand == 0:
+        return []
+    step_s = engine.step_time_estimate()
+    victims = []
+    for s in range(engine.n_active):
+        r = engine.active[s]
+        tl = engine._timing.get(r.rid)
+        if tl is None:
+            continue
+        if r.slo_ttft is not None and not r.out:
+            # still prefilling: is the first token now unreachable?
+            seq = engine._seq[s]
+            left = len(seq) - int(engine._prefill_next[s])
+            steps = math.ceil(max(1, left) / engine.prefill_chunk)
+            if now + steps * step_s > tl.submit + r.slo_ttft:
+                victims.append(s)
+                continue
+        if r.slo_tpot is not None and len(tl.token_times) > 1:
+            pace = (tl.token_times[-1] - tl.first_token) \
+                / (len(tl.token_times) - 1)
+            if pace > r.slo_tpot:
+                victims.append(s)
+    return victims[:demand]
+
+
+slo.preempt = _slo_preempt

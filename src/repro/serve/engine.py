@@ -74,6 +74,12 @@ class Request:
     eos: Optional[int] = None
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # per-request SLO deadlines (seconds on the engine clock; None = no
+    # deadline).  The ``slo`` admission policy admits by TTFT-deadline
+    # feasibility and preempts active requests that blew them; everything
+    # else ignores these fields.
+    slo_ttft: Optional[float] = None
+    slo_tpot: Optional[float] = None
     # dispatch-plan telemetry, set at retirement from the request's final
     # step (router aux + sched/* ScheduleStats when the model is MoE and
     # stats are enabled), summed over the MoE layers of that step; the
@@ -133,7 +139,31 @@ class ServeEngine:
         self._step_idx = 0
         # requests still in flight/pending when run()'s step budget ran out
         self.dropped: List[Request] = []
+        self._admission_name = admission
         self._admission = get_admission(admission)
+        # streaming hook: called as ``on_token(req, tok)`` at the moment
+        # the step's ONE host sync retires a token into ``req.out`` — the
+        # front-end fans it out to per-request callbacks.  Purely host-side
+        # (fires on already-materialized ints), so streaming adds no
+        # device syncs and tokens are bitwise-identical to batch run().
+        self.on_token = None
+        # preempted requests' engine-side cursors, keyed by rid (the KV
+        # table itself parks inside PagedKVCache under the same key)
+        self._parked: Dict[int, dict] = {}
+        # per-slot prefill source: the prompt for fresh admissions, or
+        # prompt + out[:-1] when a resume must replay (re-prefill) a
+        # preempted request whose parked KV is gone (contiguous mode, or
+        # a reclaimed paged park)
+        self._seq: List[Optional[np.ndarray]] = [None] * slots
+        # preemption/resume accounting (plain ints: artifact counters must
+        # not depend on an obs sink being attached)
+        self.n_preempted = 0
+        self.n_resumed = 0
+        # step-cost estimate for SLO feasibility: measured EWMA of wall
+        # seconds per step; virtual-time harnesses (the load generator)
+        # override via step_time_hint
+        self.step_time_hint: Optional[float] = None
+        self._ewma_step_s: Optional[float] = None
 
         if self.paged:
             self.kv = PagedKVCache(cfg, slots, capacity, kv_block_size,
@@ -201,45 +231,90 @@ class ServeEngine:
         self.obs.metrics.inc("serve/admitted")
         return True
 
+    def _emit(self, req: Request, tok: int, t: float) -> None:
+        """Retire one token into ``req.out`` (post-host-sync): latency
+        stamp + the streaming hook, zero additional device work."""
+        req.out.append(tok)
+        self._timing[req.rid].on_token(t)
+        if self.on_token is not None:
+            self.on_token(req, tok)
+
     def _admit(self, req: Request, t_admit: float) -> None:
         s = self.n_active
-        # queue wait spans run()'s submit stamp -> slot claim; a request
-        # admitted directly (no run()) has zero queue wait by definition
-        tl = RequestTimeline(submit=self._submit.pop(req.rid, t_admit),
-                             admit=t_admit)
+        # a resumed (previously preempted/dropped) request keeps its
+        # original timeline so TTFT/queue-wait/E2E stay anchored at the
+        # first submission; a fresh request gets a new one.  Queue wait
+        # spans run()'s submit stamp -> slot claim; a request admitted
+        # directly (no run()) has zero queue wait by definition.
+        tl = self._timing.get(req.rid)
+        resumed = tl is not None       # preempted earlier: timeline kept
+        if tl is None:
+            tl = RequestTimeline(submit=self._submit.pop(req.rid, t_admit),
+                                 admit=t_admit)
+            self._timing[req.rid] = tl
+        # prefill source: fresh prompts verbatim; a resume with no parked
+        # KV replays prompt + generated-so-far (minus the last token,
+        # which seeds the next decode) — greedy determinism makes the
+        # recomputed KV identical to what preemption threw away
+        if req.out:
+            seq = np.concatenate([np.asarray(req.prompt, np.int64),
+                                  np.asarray(req.out[:-1], np.int64)]
+                                 ).astype(np.int32)
+        else:
+            seq = req.prompt
         if self.paged:
-            # capacity governs, not the block-rounded table size: a
-            # prompt in the rounding slack would fit the blocks but
-            # diverge from the contiguous engine's (slots, capacity) rows
-            limit = min(self.capacity,
-                        self.kv.blocks_per_slot * self.kv.block_size)
-            if len(req.prompt) > limit:
-                # fail loudly BEFORE claiming a slot (a mid-step failure
-                # would take every active request's state down with it)
-                raise ValueError(
-                    f"prompt of {len(req.prompt)} tokens exceeds slot "
-                    f"capacity {limit} ({self.kv.blocks_per_slot} blocks "
-                    f"of {self.kv.block_size})")
-            n_cached = self.kv.attach_prefix(s, req.prompt)
-            self.pos[s] = n_cached
-            self._prefill_next[s] = n_cached
-            self._prefix_hit[s] = n_cached
-            self._prefill_forwards[s] = 0
+            park = self._parked.pop(req.rid, None)
+            if park is not None and self.kv.resume_slot(s, req.rid):
+                # host-side table un-park: KV intact, nothing recomputed
+                self.pos[s] = park["pos"]
+                self._prefill_next[s] = park["prefill_next"]
+                self._prefix_hit[s] = park["prefix_hit"]
+                self._prefill_forwards[s] = park["prefill_forwards"]
+                self._seq[s] = park["seq"]
+            else:
+                # capacity governs, not the block-rounded table size: a
+                # prompt in the rounding slack would fit the blocks but
+                # diverge from the contiguous engine's (slots, capacity)
+                # rows
+                limit = min(self.capacity,
+                            self.kv.blocks_per_slot * self.kv.block_size)
+                if len(seq) > limit:
+                    # fail loudly BEFORE claiming a slot (a mid-step
+                    # failure would take every active request's state
+                    # down with it)
+                    raise ValueError(
+                        f"prompt of {len(seq)} tokens exceeds slot "
+                        f"capacity {limit} ({self.kv.blocks_per_slot} "
+                        f"blocks of {self.kv.block_size})")
+                n_cached = self.kv.attach_prefix(s, seq)
+                self.pos[s] = n_cached
+                self._prefill_next[s] = n_cached
+                self._prefix_hit[s] = n_cached
+                self._prefill_forwards[s] = 0
+                self._seq[s] = seq
             self._last_aux[req.rid] = {}
         else:
-            toks = jnp.asarray(req.prompt, jnp.int32)[None]
+            toks = jnp.asarray(seq, jnp.int32)[None]
             with self.obs.tracer.span("serve/prefill", rid=req.rid,
-                                      prompt_tokens=len(req.prompt)):
+                                      prompt_tokens=len(seq)):
                 tok, self.cache, aux = self._prefill(
                     self.params, self.cache, self._batch(toks),
                     jnp.int32(s))
-                self.pos[s] = len(req.prompt)
-                req.out.append(int(tok[0]))     # forces the prefill sync
-            tl.on_token(self._clock())          # first token: TTFT stamp
+                self.pos[s] = len(seq)
+                first = int(tok[0])             # forces the prefill sync
             self._last_aux[req.rid] = aux
-        self._timing[req.rid] = tl
+            self._seq[s] = seq
         self.active[s] = req
         self.n_active += 1
+        if not self.paged and not resumed:
+            # first token: TTFT stamp + stream.  A resume's prefill output
+            # is a token the request already streamed (the replay's last
+            # logits re-predict out[-1]) — recompute only, never re-emit.
+            self._emit(req, first, self._clock())
+        if resumed:
+            self.n_resumed += 1
+            self.obs.metrics.inc("serve/resumed")
+            self.obs.tracer.instant("serve/resume", rid=req.rid, slot=s)
 
     # ------------------------------------------------------------------
     def step(self) -> int:
@@ -247,7 +322,22 @@ class ServeEngine:
         active slot.  Returns the number of TOKENS processed (== active
         slots in a pure-decode step; larger while prompts are chunk-
         prefilling in paged mode; 0 when idle)."""
-        return self._step_paged() if self.paged else self._step_contig()
+        t0 = self._clock()
+        n = self._step_paged() if self.paged else self._step_contig()
+        if n:
+            dt = self._clock() - t0
+            self._ewma_step_s = dt if self._ewma_step_s is None \
+                else 0.7 * self._ewma_step_s + 0.3 * dt
+        return n
+
+    def step_time_estimate(self) -> float:
+        """Expected wall seconds per engine step — what the ``slo``
+        admission policy prices TTFT/TPOT feasibility with.  Virtual-time
+        harnesses set ``step_time_hint``; otherwise the measured EWMA
+        (0.0 until the first step has been timed)."""
+        if self.step_time_hint is not None:
+            return self.step_time_hint
+        return self._ewma_step_s or 0.0
 
     # -- paged ---------------------------------------------------------
     def _step_paged(self) -> int:
@@ -263,13 +353,19 @@ class ServeEngine:
                 rows = []                   # (slot, token, position, kind)
                 for s in range(n):
                     r = self.active[s]
+                    seq = self._seq[s]
                     nx = int(self._prefill_next[s])
-                    P = len(r.prompt)
+                    P = len(seq)
                     if nx < P:
                         c = min(self.prefill_chunk, P - nx)
                         for j in range(c):
-                            kind = "final" if nx + j == P - 1 else "chunk"
-                            rows.append((s, int(r.prompt[nx + j]),
+                            # the last prefill token seeds the request's
+                            # first output ("final") — except on a resume
+                            # replay, whose outputs already exist: the
+                            # replay only rebuilds KV, it emits nothing
+                            kind = ("final" if nx + j == P - 1
+                                    and not r.out else "chunk")
+                            rows.append((s, int(seq[nx + j]),
                                          nx + j, kind))
                     else:
                         rows.append((s, r.out[-1], int(self.pos[s]),
@@ -301,21 +397,19 @@ class ServeEngine:
                 for i, (s, _t, _p, kind) in enumerate(rows):
                     self._last_aux[self.active[s].rid] = aux
                     if kind == "decode":
-                        self.active[s].out.append(int(tok_np[i]))
+                        self._emit(self.active[s], int(tok_np[i]), t_now)
                         self.pos[s] += 1
                         decode_row[s] = i
-                        self._timing[self.active[s].rid].on_token(t_now)
                     else:
                         chunks[s] += 1
                         if kind == "final":   # prompt complete: 1st token
-                            self.active[s].out.append(int(tok_np[i]))
-                            self._timing[
-                                self.active[s].rid].on_token(t_now)
+                            self._emit(self.active[s], int(tok_np[i]),
+                                       t_now)
                 for s in np.nonzero(chunks)[0]:
                     self._prefill_next[s] += chunks[s]
                     self.pos[s] += chunks[s]
                     self._prefill_forwards[s] += 1
-                    self.kv.register_filled(int(s), self.active[s].prompt,
+                    self.kv.register_filled(int(s), self._seq[s],
                                             int(self._prefill_next[s]))
                 # retire top-down so compaction (move-last-into-freed)
                 # never moves a slot we still have to examine
@@ -373,10 +467,9 @@ class ServeEngine:
             t_now = self._clock()
             with obs.tracer.span("serve/postprocess"):
                 for s, r in enumerate(reqs):
-                    r.out.append(int(tok_np[s]))
+                    self._emit(r, int(tok_np[s]), t_now)
                     self.pos[s] += 1
                     self._last_aux[r.rid] = aux
-                    self._timing[r.rid].on_token(t_now)
                 # retire top-down so the swap-with-last compaction never
                 # moves a slot we still have to examine
                 for s in range(n - 1, -1, -1):
@@ -404,37 +497,19 @@ class ServeEngine:
         req.stats = {k: float(v)
                      for k, v in self._last_aux.pop(req.rid).items()}
         req.stats["serve/decode_batch"] = float(decode_batch)
-        last = self.n_active - 1
         if self.paged:
             req.stats["serve/prefix_hit_tokens"] = float(self._prefix_hit[s])
             req.stats["serve/prefill_forwards"] = \
                 float(self._prefill_forwards[s])
             self.kv.release_slot(s)
-            if s != last:
-                self.kv.move_slot(s, last)
-                self.active[s] = self.active[last]
-                self.pos[s] = self.pos[last]
-                self._prefill_next[s] = self._prefill_next[last]
-                self._prefix_hit[s] = self._prefix_hit[last]
-                self._prefill_forwards[s] = self._prefill_forwards[last]
-            self._prefill_next[last] = 0
-            self._prefix_hit[last] = 0
-            self._prefill_forwards[last] = 0
         else:
             req.stats["serve/prefix_hit_tokens"] = 0.0
             req.stats["serve/prefill_forwards"] = 1.0
-            if s != last:
-                self.cache = self._swap(self.cache, jnp.int32(s),
-                                        jnp.int32(last))
-                self.active[s] = self.active[last]
-                self.pos[s] = self.pos[last]
+        self._compact(s)
         tl = self._timing.pop(req.rid, None)
         if tl is not None:
             req.stats.update(tl.finalize(end=self._clock()))
         req.done = True
-        self.active[last] = None
-        self.pos[last] = 0
-        self.n_active -= 1
         obs = self.obs
         obs.tracer.instant("serve/retire", rid=req.rid)
         if obs.enabled:
@@ -443,10 +518,109 @@ class ServeEngine:
             for key in ("ttft_s", "tpot_s", "queue_wait_s", "e2e_s"):
                 if f"lat/{key}" in req.stats:
                     m.observe(f"serve/{key}", req.stats[f"lat/{key}"])
+            # SLO outcome at retirement: deadline misses by family
+            if req.slo_ttft is not None \
+                    and req.stats.get("lat/ttft_s", 0.0) > req.slo_ttft:
+                m.inc("serve/slo_ttft_miss")
+            if req.slo_tpot is not None \
+                    and req.stats.get("lat/tpot_s", 0.0) > req.slo_tpot:
+                m.inc("serve/slo_tpot_miss")
             # absorb the retirement-time plan stats (summed over the MoE
             # layers of the request's final step) as histogram samples
             m.observe_many("", {k: v for k, v in req.stats.items()
                                 if k.startswith("sched/")})
+
+    def _compact(self, s: int) -> None:
+        """Vacate slot ``s`` keeping the active prefix contiguous (paged:
+        host-side table move; contiguous: device row swap).  The slot's KV
+        must already be released or parked by the caller."""
+        last = self.n_active - 1
+        if self.paged:
+            if s != last:
+                self.kv.move_slot(s, last)
+                self.active[s] = self.active[last]
+                self.pos[s] = self.pos[last]
+                self._prefill_next[s] = self._prefill_next[last]
+                self._prefix_hit[s] = self._prefix_hit[last]
+                self._prefill_forwards[s] = self._prefill_forwards[last]
+                self._seq[s] = self._seq[last]
+            self._prefill_next[last] = 0
+            self._prefix_hit[last] = 0
+            self._prefill_forwards[last] = 0
+        else:
+            if s != last:
+                self.cache = self._swap(self.cache, jnp.int32(s),
+                                        jnp.int32(last))
+                self.active[s] = self.active[last]
+                self.pos[s] = self.pos[last]
+                self._seq[s] = self._seq[last]
+        self._seq[last] = None
+        self.active[last] = None
+        self.pos[last] = 0
+        self.n_active -= 1
+
+    def preempt(self, s: int) -> Request:
+        """Evict the request in slot ``s`` mid-flight (the SLO admission
+        policy's lever against over-budget/deadline-blown requests).  The
+        request keeps ``done=False`` and its partial ``out``; paged mode
+        parks its block table host-side under its rid (resume is pure
+        bookkeeping — no KV recompute unless allocation pressure reclaims
+        the park), contiguous mode abandons the cache row (resume
+        re-prefills prompt + generated tokens, token-identical by greedy
+        determinism).  A finite censored ``lat/*`` snapshot lands in
+        ``Request.stats`` immediately so a never-resumed victim still
+        reports real latency numbers."""
+        if not (0 <= s < self.n_active):
+            raise ValueError(f"no active request in slot {s} "
+                             f"(n_active={self.n_active})")
+        req = self.active[s]
+        t_now = self._clock()
+        if self.paged:
+            self._parked[req.rid] = {
+                "pos": int(self.pos[s]),
+                "prefill_next": int(self._prefill_next[s]),
+                "prefix_hit": int(self._prefix_hit[s]),
+                "prefill_forwards": int(self._prefill_forwards[s]),
+                "seq": self._seq[s],
+            }
+            self.kv.park_slot(s, req.rid)
+        self._compact(s)
+        self._last_aux.pop(req.rid, None)
+        # censored latency snapshot: finite now, overwritten wholesale if
+        # the request later resumes and retires.  The timeline itself
+        # stays keyed so the resume keeps the original submit anchor.
+        tl = self._timing.get(req.rid)
+        if tl is not None:
+            req.stats = dict(tl.finalize(end=t_now))
+            req.stats["serve/preempted"] = 1.0
+        self.n_preempted += 1
+        self.obs.metrics.inc("serve/preempted")
+        self.obs.tracer.instant("serve/preempt", rid=req.rid, slot=s,
+                                decode_tokens=len(req.out))
+        return req
+
+    def enqueue(self, requests: List[Request]) -> List[Request]:
+        """Stamp submit times and return the sublist eligible for
+        admission (not done, not already occupying a slot).  Resubmission
+        keeps a request's original queue-wait origin."""
+        live = {id(r) for r in self.active if r is not None}
+        pending = [r for r in requests if not r.done and id(r) not in live]
+        t_submit = self._clock()
+        for r in pending:
+            self._submit.setdefault(r.rid, t_submit)
+        return pending
+
+    def schedule(self, pending: List[Request]) -> None:
+        """One scheduling pass: let the admission policy preempt (policies
+        exposing a ``.preempt(engine, pending)`` hook, e.g. ``slo``), then
+        fill free slots from ``pending`` (mutated in place; victims of
+        preemption rejoin it, resumable)."""
+        pre = getattr(self._admission, "preempt", None)
+        if pre is not None and pending:
+            for s in sorted(pre(self, pending), reverse=True):
+                pending.append(self.preempt(s))
+        while pending and self.n_active < self.slots:
+            self.admit(pending.pop(self._admission(pending, engine=self)))
 
     def run(self, requests: List[Request], max_steps: int = 512):
         """Drive admission + decode until done (or the step budget runs
@@ -456,21 +630,49 @@ class ServeEngine:
         ``run`` may resume them: requests already occupying a slot (or
         already done) are excluded from admission so they are never
         re-prefilled, but active slots keep decoding."""
-        live = {id(r) for r in self.active if r is not None}
-        pending = [r for r in requests if not r.done and id(r) not in live]
-        t_submit = self._clock()
-        for r in pending:       # queue-wait origin; resumption keeps the
-            self._submit.setdefault(r.rid, t_submit)   # original stamp
+        pending = self.enqueue(requests)
         self.dropped = []
         for _ in range(max_steps):
-            while pending and self.n_active < self.slots:
-                self.admit(pending.pop(
-                    self._admission(pending, engine=self)))
+            self.schedule(pending)
             if self.step() == 0 and not pending:
                 break
         self.dropped = [r for r in requests if not r.done]
         if self.dropped:
+            self.finalize_drops(self.dropped)
             self.obs.metrics.inc("serve/dropped", len(self.dropped))
             self.obs.tracer.instant("serve/step_budget_exhausted",
                                     dropped=len(self.dropped))
         return [r for r in requests if r.done]
+
+    def finalize_drops(self, requests: List[Request]) -> None:
+        """Give every unfinished request a FINITE censored ``lat/*``
+        snapshot (clocks stopped now) so all-dropped runs still report
+        real latency numbers instead of silently vanishing from
+        ``latency_summary``.  ``serve/dropped`` marks the censoring; a
+        later resume-and-retire overwrites the snapshot wholesale."""
+        t_now = self._clock()
+        for r in requests:
+            if r.done:
+                continue
+            tl = self._timing.get(r.rid)
+            if tl is None:      # never admitted: pure queue wait
+                tl = RequestTimeline(
+                    submit=self._submit.get(r.rid, t_now), admit=t_now)
+            stats = dict(tl.finalize(end=t_now))
+            stats["serve/dropped"] = 1.0
+            if r.stats.get("serve/preempted"):
+                stats["serve/preempted"] = 1.0
+            r.stats = stats
+
+    def describe(self, *, seed=None) -> dict:
+        """The cell config that makes a results/serve artifact row
+        self-describing (report.py renders these columns)."""
+        d = {"arch": self.cfg.name, "slots": self.slots,
+             "capacity": self.capacity, "admission": self._admission_name,
+             "executor": self.rc.executor,
+             "schedule_policy": self.rc.schedule_policy,
+             "quant": self.rc.quant, "kv_block_size": self.kv_block_size,
+             "prefill_chunk": self.prefill_chunk if self.paged else 0}
+        if seed is not None:
+            d["seed"] = seed
+        return d

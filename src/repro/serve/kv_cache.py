@@ -99,7 +99,17 @@ class PagedKVCache:
         # per-slot chained-hash cursor for registering blocks as they fill:
         # (next block index to register, digest of the chain before it)
         self._chain: Dict[int, tuple] = {}
+        # preempted requests' parked tables (key -> {table, n_alloc, chain}),
+        # LRU order: blocks stay refcounted (contents pinned) until the
+        # request resumes or allocation pressure reclaims the record
+        self._parked: "OrderedDict[object, dict]" = OrderedDict()
+        # read-only probe memo (admission policies re-probe every step):
+        # key -> (index generation, cached token count); any hash-index
+        # mutation bumps the generation and drops the whole memo
+        self._probe_gen = 0
+        self._probe_memo: Dict[object, tuple] = {}
         self.hits = self.misses = self.evictions = 0
+        self.park_reclaims = 0
         self.hit_tokens = 0
         # observability sinks (repro.obs; null by default — bind_obs()):
         # block alloc/evict/compaction become counters + trace instants
@@ -115,21 +125,53 @@ class PagedKVCache:
         self._tracer = tracer
 
     # -- allocation ----------------------------------------------------
+    def _index_mutated(self) -> None:
+        """The hash index changed: read-only probe results are stale."""
+        self._probe_gen += 1
+        self._probe_memo.clear()
+
     def _alloc_block(self) -> int:
         if self.free:
             self._metrics.inc("kv/blocks_allocated")
             return self.free.pop()
+        while not self._cached_free and self._parked:
+            self._reclaim_parked()     # may refill free OR cached_free
+            if self.free:
+                self._metrics.inc("kv/blocks_allocated")
+                return self.free.pop()
         if not self._cached_free:
             raise RuntimeError("paged pool exhausted — broken refcounting "
                                "(n_blocks guarantees worst-case capacity)")
         b, _ = self._cached_free.popitem(last=False)   # evict LRU
         digest = self._block_hash.pop(b)
         del self._hash_to_block[digest]
+        self._index_mutated()
         self.evictions += 1
         self._metrics.inc("kv/blocks_allocated")
         self._metrics.inc("kv/evictions")
         self._tracer.instant("kv/evict", block=b)
         return b
+
+    def _release_blocks(self, table: np.ndarray, n_alloc: int) -> None:
+        for j in range(n_alloc):
+            b = int(table[j])
+            self.refcount[b] -= 1
+            if self.refcount[b] == 0:
+                if b in self._block_hash:
+                    self._cached_free[b] = None    # park: contents reusable
+                else:
+                    self.free.append(b)
+
+    def _reclaim_parked(self) -> None:
+        """Allocation pressure: sacrifice the LRU parked (preempted) table
+        so decoding slots never starve.  The victim's resume will find no
+        record and falls back to re-prefill — strictly a latency cost,
+        never a correctness one."""
+        key, rec = self._parked.popitem(last=False)
+        self._release_blocks(rec["table"], rec["n_alloc"])
+        self.park_reclaims += 1
+        self._metrics.inc("kv/park_reclaims")
+        self._tracer.instant("kv/park_reclaim", key=str(key))
 
     def ensure_allocated(self, slot: int, last_pos: int) -> None:
         """Grow ``slot``'s table so position ``last_pos`` is addressable.
@@ -184,12 +226,21 @@ class PagedKVCache:
         self._metrics.inc("kv/prefix_hit_tokens", n_hit * bs)
         return n_hit * bs
 
-    def probe_prefix(self, prompt: np.ndarray) -> int:
+    def probe_prefix(self, prompt: np.ndarray, *, memo_key=None) -> int:
         """Read-only lookup: how many TOKENS of ``prompt`` the index can
         currently serve from shared blocks (no attach, no refcounts) —
-        what admission policies consult to prefer warm-prefix requests."""
+        what admission policies consult to prefer warm-prefix requests.
+
+        ``memo_key`` (typically the request's rid) memoizes the answer
+        until the hash index next mutates: admission policies probe every
+        pending request every scheduling pass, and without the memo each
+        pass re-hashes every pending prompt from scratch."""
         if not self.prefix_cache:
             return 0
+        if memo_key is not None:
+            hit = self._probe_memo.get(memo_key)
+            if hit is not None and hit[0] == self._probe_gen:
+                return hit[1]
         bs = self.block_size
         prompt = np.asarray(prompt)
         max_full = min((len(prompt) - 1) // bs, self.blocks_per_slot)
@@ -200,6 +251,8 @@ class PagedKVCache:
             if digest not in self._hash_to_block:
                 break
             n = i + 1
+        if memo_key is not None:
+            self._probe_memo[memo_key] = (self._probe_gen, n * bs)
         return n * bs
 
     def register_filled(self, slot: int, prompt: np.ndarray,
@@ -218,22 +271,53 @@ class PagedKVCache:
             if digest not in self._hash_to_block:
                 self._hash_to_block[digest] = b
                 self._block_hash[b] = digest
+                self._index_mutated()
             i += 1
         self._chain[slot] = (i, digest)
 
-    # -- release / views ----------------------------------------------
+    # -- release / park / views ----------------------------------------
     def release_slot(self, slot: int) -> None:
-        for j in range(int(self.n_alloc[slot])):
-            b = int(self.tables[slot, j])
-            self.refcount[b] -= 1
-            if self.refcount[b] == 0:
-                if b in self._block_hash:
-                    self._cached_free[b] = None    # park: contents reusable
-                else:
-                    self.free.append(b)
+        self._release_blocks(self.tables[slot], int(self.n_alloc[slot]))
         self.tables[slot, :] = 0
         self.n_alloc[slot] = 0
         self._chain.pop(slot, None)
+
+    def park_slot(self, slot: int, key) -> None:
+        """Preemption: detach ``slot``'s table into a parked record under
+        ``key`` (the request's rid).  Blocks KEEP their refcounts, so the
+        request's KV survives intact for a host-side-only resume; under
+        allocation pressure the LRU record is reclaimed instead (the
+        resume then re-prefills).  The slot itself leaves empty."""
+        self._parked[key] = {"table": self.tables[slot].copy(),
+                             "n_alloc": int(self.n_alloc[slot]),
+                             "chain": self._chain.get(slot)}
+        self.tables[slot, :] = 0
+        self.n_alloc[slot] = 0
+        self._chain.pop(slot, None)
+        self._metrics.inc("kv/tables_parked")
+        self._tracer.instant("kv/park", slot=slot, key=str(key))
+
+    def resume_slot(self, slot: int, key) -> bool:
+        """Re-attach the parked table under ``key`` to (empty) ``slot``.
+        False when the record was reclaimed for allocation pressure — the
+        caller must re-prefill instead."""
+        rec = self._parked.pop(key, None)
+        if rec is None:
+            return False
+        assert self.n_alloc[slot] == 0, "resume target slot must be empty"
+        self.tables[slot] = rec["table"]
+        self.n_alloc[slot] = rec["n_alloc"]
+        if rec["chain"] is not None:
+            self._chain[slot] = rec["chain"]
+        self._metrics.inc("kv/tables_resumed")
+        self._tracer.instant("kv/resume", slot=slot, key=str(key))
+        return True
+
+    def drop_parked(self, key) -> None:
+        """Discard a parked record (the request will never resume)."""
+        rec = self._parked.pop(key, None)
+        if rec is not None:
+            self._release_blocks(rec["table"], rec["n_alloc"])
 
     def move_slot(self, dst: int, src: int) -> None:
         """Host-side slot compaction (the paged analogue of the contiguous
@@ -276,6 +360,8 @@ class PagedKVCache:
                             for b, h in self._block_hash.items()}
         self._cached_free = OrderedDict(
             (int(perm[b]), None) for b in self._cached_free)
+        for rec in self._parked.values():
+            rec["table"] = perm[rec["table"]].astype(np.int32)
 
     # -- introspection -------------------------------------------------
     def stats(self) -> dict:
@@ -284,4 +370,6 @@ class PagedKVCache:
                 "blocks_parked": len(self._cached_free),
                 "prefix_hits": self.hits, "prefix_misses": self.misses,
                 "prefix_hit_tokens": self.hit_tokens,
-                "evictions": self.evictions}
+                "evictions": self.evictions,
+                "parked_tables": len(self._parked),
+                "park_reclaims": self.park_reclaims}

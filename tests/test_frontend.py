@@ -1,0 +1,272 @@
+"""Open-stream front-end, SLO admission/preemption, and the trace-driven
+load generator (DESIGN.md §11).
+
+Everything time-dependent runs on a ``VirtualClock`` injected as the
+observability clock with ``engine.step_time_hint`` pricing feasibility,
+so admission decisions, preemptions and goodput numbers are pure
+functions of (seed, config) — no wall-clock racing in CI.
+"""
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import RunConfig, init_params
+from repro.obs import drop_summary, latency_summary
+from repro.serve.admission import get_admission
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.frontend import ServingFrontend
+from repro.serve.loadgen import (PATTERNS, VirtualClock, make_virtual_obs,
+                                 replay, synth_trace)
+
+RC = RunConfig(q_chunk=16, kv_chunk=16)
+
+
+def dense_cfg():
+    return reduced(get_config("smollm-360m"), layers=1, d_model=32)
+
+
+def virt_engine(cfg, params, **kw):
+    clock, obs = make_virtual_obs(enabled=kw.pop("metrics", False))
+    eng = ServeEngine(cfg, params, rc=RC, obs=obs, **kw)
+    return eng, clock
+
+
+# ----------------------------------------------------------------------
+# front-end queue semantics
+# ----------------------------------------------------------------------
+def test_submit_reports_each_completion_once():
+    cfg = dense_cfg()
+    params = init_params(cfg, jax.random.key(0))
+    eng = ServeEngine(cfg, params, slots=2, capacity=32, rc=RC)
+    fe = ServingFrontend(eng)
+    rng = np.random.default_rng(0)
+    handles = [fe.submit(rng.integers(0, cfg.vocab_size, 4), max_new=3)
+               for _ in range(4)]
+    assert fe.outstanding == 4
+    assert len({r.rid for r in handles}) == 4        # auto-rids unique
+    seen = []
+    for _ in range(200):
+        seen += [r.rid for r in fe.poll()]
+        if not fe.outstanding:
+            break
+    assert sorted(seen) == sorted(r.rid for r in handles)
+    assert len(seen) == len(set(seen))               # no double report
+    assert all(r.done and r.out for r in handles)
+
+
+def test_duplicate_inflight_rid_rejected():
+    cfg = dense_cfg()
+    params = init_params(cfg, jax.random.key(0))
+    fe = ServingFrontend(ServeEngine(cfg, params, slots=1, capacity=32,
+                                     rc=RC))
+    fe.submit(np.asarray([1, 2, 3], np.int32), max_new=2, rid=7)
+    with pytest.raises(ValueError):
+        fe.submit(np.asarray([4, 5], np.int32), max_new=2, rid=7)
+
+
+def test_drain_finalizes_censored_stats():
+    """Requests still unfinished when drain()'s budget runs out carry
+    finite censored lat/* stats and a serve/dropped marker — and remain
+    resumable by a later drain (same tokens as an uninterrupted run)."""
+    cfg = dense_cfg()
+    params = init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab_size, 5).astype(np.int32)
+               for _ in range(3)]
+    ref = [Request(rid=i, prompt=p, max_new=4)
+           for i, p in enumerate(prompts)]
+    ServeEngine(cfg, params, slots=1, capacity=32, rc=RC).run(ref)
+
+    eng = ServeEngine(cfg, params, slots=1, capacity=32, rc=RC)
+    fe = ServingFrontend(eng)
+    handles = [fe.submit(p, max_new=4, rid=i)
+               for i, p in enumerate(prompts)]
+    fe.drain(max_steps=2)
+    undone = [r for r in handles if not r.done]
+    assert undone
+    for r in undone:
+        assert r.stats.get("serve/dropped") == 1.0
+        assert all(np.isfinite(v) for v in r.stats.values())
+    ds = drop_summary(handles)
+    assert ds and ds["n"] == len(undone) and ds["wait_s"]
+    # the all-dropped completion summary stays empty rather than lying
+    assert not any(latency_summary([r for r in handles
+                                    if r.done]).values()) or ds["n"] < 3
+    fe.drain(max_steps=300)
+    assert all(r.done for r in handles)
+    assert {r.rid: r.out for r in handles} == {r.rid: r.out for r in ref}
+
+
+# ----------------------------------------------------------------------
+# slo admission policy
+# ----------------------------------------------------------------------
+def test_slo_admission_orders_by_deadline_feasibility():
+    """Feasible deadline-holders admit earliest-deadline-first; blown
+    deadlines drop to backfill behind no-deadline traffic."""
+    cfg = dense_cfg()
+    params = init_params(cfg, jax.random.key(0))
+    eng, clock = virt_engine(cfg, params, slots=1, capacity=64,
+                             kv_block_size=4, prefill_chunk=4,
+                             admission="slo")
+    eng.step_time_hint = 0.05
+    prompt = np.arange(8, dtype=np.int32)
+    reqs = [Request(rid=0, prompt=prompt, max_new=2),            # no slo
+            Request(rid=1, prompt=prompt, max_new=2, slo_ttft=0.5),
+            Request(rid=2, prompt=prompt, max_new=2, slo_ttft=0.3),
+            Request(rid=3, prompt=prompt, max_new=2, slo_ttft=0.01)]
+    pending = eng.enqueue(reqs)
+    policy = get_admission("slo")
+    # rid 3 is already infeasible (2 prefill steps * 0.05 > 0.01): the
+    # earliest FEASIBLE deadline (rid 2) wins the slot
+    assert policy(pending, engine=eng) == 2
+    pending.pop(2)
+    assert policy(pending, engine=eng) == 1      # next feasible deadline
+    pending.pop(1)
+    # no-deadline FCFS beats the blown deadline (work-conserving order)
+    assert policy(pending, engine=eng) == 0
+    pending.pop(0)
+    assert policy(pending, engine=eng) == 0      # backfill runs last
+    assert pending[0].rid == 3
+
+
+def test_slo_preempts_hopeless_prefill_for_feasible_arrival():
+    """An active long prefill whose TTFT deadline became unreachable is
+    parked the moment a feasible deadline-holder waits — and both
+    requests finish with tokens identical to an unpreempted fcfs run."""
+    cfg = dense_cfg()
+    params = init_params(cfg, jax.random.key(0))
+    long_p = np.arange(1, 33, dtype=np.int32)        # 8 prefill steps
+    short_p = np.asarray([40, 41, 42], np.int32)
+
+    ref = [Request(rid=0, prompt=long_p, max_new=3),
+           Request(rid=1, prompt=short_p, max_new=3)]
+    ServeEngine(cfg, params, slots=2, capacity=64, rc=RC,
+                kv_block_size=4, prefill_chunk=4).run(ref)
+
+    eng, clock = virt_engine(cfg, params, slots=1, capacity=64,
+                             kv_block_size=4, prefill_chunk=4,
+                             admission="slo")
+    eng.step_time_hint = 0.05
+    fe = ServingFrontend(eng)
+    h0 = fe.submit(long_p, max_new=3, slo_ttft=0.2)  # will blow TTFT
+    clock.advance(0.05)
+    fe.poll()                                        # admits the long one
+    assert eng.n_active == 1
+    h1 = fe.submit(short_p, max_new=3, slo_ttft=0.3)  # feasible rival
+    for _ in range(300):
+        clock.advance(0.05)
+        fe.poll()
+        if not fe.outstanding:
+            break
+    assert eng.n_preempted >= 1 and eng.n_resumed == eng.n_preempted
+    assert h0.done and h1.done
+    assert [h0.out, h1.out] == [ref[0].out, ref[1].out]
+    # the preempted-and-resumed request keeps its original submit anchor
+    assert h0.stats["lat/ttft_s"] > h1.stats["lat/ttft_s"]
+
+
+def test_slo_never_preempts_without_demand():
+    """Preemption is throttled by feasible waiting demand: an empty (or
+    deadline-free) queue never evicts an over-budget active request."""
+    cfg = dense_cfg()
+    params = init_params(cfg, jax.random.key(0))
+    eng, clock = virt_engine(cfg, params, slots=1, capacity=64,
+                             kv_block_size=4, prefill_chunk=4,
+                             admission="slo")
+    eng.step_time_hint = 0.05
+    fe = ServingFrontend(eng)
+    fe.submit(np.arange(1, 33, dtype=np.int32), max_new=3, slo_ttft=0.01)
+    fe.submit(np.asarray([50, 51], np.int32), max_new=3)   # no deadline
+    for _ in range(300):
+        clock.advance(0.05)
+        fe.poll()
+        if not fe.outstanding:
+            break
+    assert eng.n_preempted == 0
+    assert not fe.outstanding
+
+
+# ----------------------------------------------------------------------
+# prefix-probe memoization (admission satellite)
+# ----------------------------------------------------------------------
+def test_probe_prefix_memoized_until_pool_mutates(monkeypatch):
+    cfg = dense_cfg()
+    params = init_params(cfg, jax.random.key(0))
+    eng = ServeEngine(cfg, params, slots=1, capacity=32, rc=RC,
+                      kv_block_size=4)
+    warm = Request(rid=0, prompt=np.arange(1, 10, dtype=np.int32),
+                   max_new=2)
+    eng.run([warm])                                  # registers hashes
+
+    import repro.serve.kv_cache as kv_mod
+    calls = []
+    real = kv_mod._chain_digest
+    monkeypatch.setattr(kv_mod, "_chain_digest",
+                        lambda *a, **k: (calls.append(1), real(*a, **k))[1])
+    prompt = np.arange(1, 12, dtype=np.int32)
+    first = eng.kv.probe_prefix(prompt, memo_key=101)
+    assert first == 8 and calls                      # cold probe hashes
+    n_cold = len(calls)
+    assert eng.kv.probe_prefix(prompt, memo_key=101) == first
+    assert len(calls) == n_cold                      # memo hit: no hashing
+    # registering new content invalidates every memo entry
+    eng.run([Request(rid=1, prompt=np.asarray([60, 61, 62, 63, 64],
+                                              np.int32), max_new=2)])
+    assert eng.kv.probe_prefix(prompt, memo_key=101) == first
+    assert len(calls) > n_cold                       # re-probed after gen bump
+
+
+# ----------------------------------------------------------------------
+# load generator
+# ----------------------------------------------------------------------
+def test_synth_trace_shapes_and_determinism():
+    for pattern in PATTERNS:
+        a = synth_trace(pattern, seed=3, n=10, rate=5.0, vocab=100)
+        b = synth_trace(pattern, seed=3, n=10, rate=5.0, vocab=100)
+        assert len(a) == 10
+        assert all(ev.t <= nxt.t for ev, nxt in zip(a, a[1:]))
+        assert [(ev.t, ev.prompt.tolist()) for ev in a] \
+            == [(ev.t, ev.prompt.tolist()) for ev in b]
+    fleet = synth_trace("shared_prefix", seed=0, n=8, rate=4.0, vocab=100,
+                        prefix_len=6)
+    head = fleet[0].prompt[:6].tolist()
+    assert all(ev.prompt[:6].tolist() == head for ev in fleet)
+    with pytest.raises(ValueError):
+        synth_trace("nope", seed=0, n=1, rate=1.0, vocab=10)
+
+
+def test_replay_deterministic_and_artifact_keys():
+    """Same (seed, config) -> identical replay record; the record carries
+    every key the CI loadgen smoke asserts on."""
+    cfg = dense_cfg()
+    params = init_params(cfg, jax.random.key(0))
+
+    def once():
+        trace = synth_trace("burst", seed=2, n=8, rate=8.0,
+                            vocab=cfg.vocab_size, max_new=4, slo_ttft=0.4,
+                            burst_size=4, prompt_hi=24)
+        eng, clock = virt_engine(cfg, params, slots=2, capacity=64,
+                                 kv_block_size=4, prefill_chunk=4,
+                                 admission="slo", metrics=True)
+        return replay(eng, trace, clock=clock, step_time=0.05, seed=2,
+                      pattern="burst")
+    a, b = once(), once()
+    assert a == b                                    # virtual-time purity
+    for key in ("goodput_rps", "slo_attainment", "preempted", "resumed",
+                "ttft_p50_s", "ttft_p99_s", "tpot_p50_s", "tpot_p99_s",
+                "completed", "dropped", "config", "obs_counters"):
+        assert key in a, key
+    assert a["completed"] == 8
+    assert a["config"]["admission"] == "slo"
+    assert a["config"]["seed"] == 2
+    for k in ("executor", "quant", "kv_block_size", "prefill_chunk",
+              "schedule_policy"):
+        assert k in a["config"], k
+
+
+def test_virtual_clock_monotonic():
+    c = VirtualClock(1.0)
+    assert c() == 1.0
+    c.advance(0.25)
+    assert c() == 1.25

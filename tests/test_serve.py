@@ -675,3 +675,181 @@ def test_prefix_hit_admission_policy():
     done = eng2.run([cold, warm])
     assert len(done) == 2
     assert warm.stats["serve/prefix_hit_tokens"] == 8.0
+
+
+# ----------------------------------------------------------------------
+# Open-stream front-end: token streaming + preempt/resume (DESIGN.md §11)
+# ----------------------------------------------------------------------
+from tests.hypothesis_compat import given, settings, st  # noqa: E402
+
+
+def _dense_cfg():
+    return reduced(get_config("smollm-360m"), layers=1, d_model=32)
+
+
+@pytest.mark.parametrize("mkcfg", [_dense_cfg, moe_cfg],
+                         ids=["dense", "moe"])
+@pytest.mark.parametrize("kvb", [4, 0], ids=["paged", "contiguous"])
+def test_streaming_parity_with_closed_batch(mkcfg, kvb):
+    """Streamed tokens (frontend submit/poll + on_token callbacks) are
+    bitwise-identical to the closed-batch ``run()`` output, dense and
+    MoE, paged and contiguous — streaming taps the step's one host sync
+    and never adds device work."""
+    from repro.serve.frontend import ServingFrontend
+    cfg = mkcfg()
+    params = init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(11)
+    proto = _mk_reqs(cfg, 4, rng, max_new=4)
+
+    ref = [Request(rid=r.rid, prompt=r.prompt, max_new=r.max_new)
+           for r in proto]
+    ServeEngine(cfg, params, slots=2, capacity=32, rc=RC,
+                kv_block_size=kvb).run(ref)
+    ref_outs = _outs(ref)
+
+    eng = ServeEngine(cfg, params, slots=2, capacity=32, rc=RC,
+                      kv_block_size=kvb)
+    fe = ServingFrontend(eng)
+    streamed = {}
+    handles = [fe.submit(r.prompt, max_new=r.max_new, rid=r.rid,
+                         on_token=lambda req, tok:
+                         streamed.setdefault(req.rid, []).append(tok))
+               for r in proto]
+    done = fe.drain()
+    assert len(done) == 4 and all(r.done for r in handles)
+    assert _outs(handles) == ref_outs      # final outputs identical
+    assert streamed == ref_outs            # ...and so is the live stream
+
+
+@pytest.mark.parametrize("kvb", [4, 0], ids=["paged", "contiguous"])
+def test_preempt_resume_token_identity(kvb):
+    """A request preempted mid-decode and later resumed produces output
+    bitwise-identical to an uninterrupted run (paged: host-side table
+    park; contiguous: greedy re-prefill of prompt + emitted tokens)."""
+    cfg = moe_cfg()
+    params = init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(5)
+    proto = _mk_reqs(cfg, 4, rng, max_new=5)
+    ref = [Request(rid=r.rid, prompt=r.prompt, max_new=r.max_new)
+           for r in proto]
+    ServeEngine(cfg, params, slots=2, capacity=32, rc=RC,
+                kv_block_size=kvb).run(ref)
+
+    reqs = [Request(rid=r.rid, prompt=r.prompt, max_new=r.max_new)
+            for r in proto]
+    eng = ServeEngine(cfg, params, slots=2, capacity=32, rc=RC,
+                      kv_block_size=kvb)
+    pending = eng.enqueue(reqs)
+    eng.schedule(pending)
+    for _ in range(2):
+        eng.step()
+    victim = eng.preempt(0)
+    assert not victim.done
+    assert victim.stats.get("serve/preempted") == 1.0     # censored marker
+    assert all(np.isfinite(v) for v in victim.stats.values())
+    pending.append(victim)
+    for _ in range(200):
+        eng.schedule(pending)
+        if eng.step() == 0 and not pending:
+            break
+    assert all(r.done for r in reqs)
+    assert _outs(reqs) == _outs(ref)
+    assert eng.n_preempted == 1 and eng.n_resumed == 1
+    # the preempted request's completion stats replace the censored ones
+    assert "serve/preempted" not in victim.stats or victim.done
+
+
+_FUZZ_CFG = None
+
+
+def _fuzz_setup():
+    """Shared (cfg, params, reference outs) for the fuzzed preemption
+    property — built once so hypothesis examples reuse the jit cache."""
+    global _FUZZ_CFG
+    if _FUZZ_CFG is None:
+        cfg = _dense_cfg()
+        params = init_params(cfg, jax.random.key(0))
+        rng = np.random.default_rng(23)
+        proto = _mk_reqs(cfg, 5, rng, max_new=6)
+        refs = {}
+        for kvb in (4, 0):
+            ref = [Request(rid=r.rid, prompt=r.prompt, max_new=r.max_new)
+                   for r in proto]
+            ServeEngine(cfg, params, slots=2, capacity=32, rc=RC,
+                        kv_block_size=kvb).run(ref)
+            refs[kvb] = _outs(ref)
+        assert refs[4] == refs[0]
+        _FUZZ_CFG = (cfg, params, proto, refs[4])
+    return _FUZZ_CFG
+
+
+@settings(max_examples=8, deadline=None)
+@given(steps_a=st.integers(min_value=0, max_value=4),
+       slot=st.integers(min_value=0, max_value=1),
+       steps_b=st.integers(min_value=0, max_value=4),
+       kvb=st.sampled_from([4, 0]))
+def test_fuzzed_preemption_points_token_identity(steps_a, slot, steps_b,
+                                                 kvb):
+    """Churn-suite extension: preempt at FUZZED points — after
+    ``steps_a`` steps evict ``slot``, run ``steps_b`` more steps, evict
+    slot 0 again (possibly a resumed request, possibly mid-prefill) —
+    final outputs must equal the uninterrupted batch, paged and
+    contiguous."""
+    cfg, params, proto, ref_outs = _fuzz_setup()
+    reqs = [Request(rid=r.rid, prompt=r.prompt, max_new=r.max_new)
+            for r in proto]
+    eng = ServeEngine(cfg, params, slots=2, capacity=32, rc=RC,
+                      kv_block_size=kvb)
+    pending = eng.enqueue(reqs)
+
+    def run_steps(n):
+        for _ in range(n):
+            eng.schedule(pending)
+            if eng.step() == 0 and not pending:
+                return
+    run_steps(steps_a)
+    if eng.n_active > slot:
+        pending.append(eng.preempt(slot))
+    run_steps(steps_b)
+    if eng.n_active > 0:
+        pending.append(eng.preempt(0))
+    for _ in range(300):
+        eng.schedule(pending)
+        if eng.step() == 0 and not pending:
+            break
+    assert all(r.done for r in reqs)
+    assert _outs(reqs) == ref_outs
+    assert eng.n_resumed == eng.n_preempted
+
+
+def test_park_reclaim_falls_back_to_replay():
+    """Under pool pressure the paged cache reclaims parked tables (LRU)
+    instead of failing allocation; the evicted request still resumes —
+    via replay re-prefill — with identical tokens."""
+    cfg = _dense_cfg()
+    params = init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(9)
+    # prompts long enough that two active slots need the whole pool
+    proto = _mk_reqs(cfg, 3, rng, lo=10, hi=12, max_new=4)
+    ref = [Request(rid=r.rid, prompt=r.prompt, max_new=r.max_new)
+           for r in proto]
+    ServeEngine(cfg, params, slots=2, capacity=16, rc=RC,
+                kv_block_size=4, prefix_cache=False).run(ref)
+
+    reqs = [Request(rid=r.rid, prompt=r.prompt, max_new=r.max_new)
+            for r in proto]
+    eng = ServeEngine(cfg, params, slots=2, capacity=16, rc=RC,
+                      kv_block_size=4, prefix_cache=False)
+    pending = eng.enqueue(reqs)
+    eng.schedule(pending)
+    for _ in range(2):
+        eng.step()
+    pending.append(eng.preempt(0))            # parks a table, KV pinned
+    assert eng.kv.stats()["parked_tables"] == 1
+    for _ in range(300):                      # pool pressure reclaims it
+        eng.schedule(pending)
+        if eng.step() == 0 and not pending:
+            break
+    assert eng.kv.park_reclaims >= 1
+    assert all(r.done for r in reqs)
+    assert _outs(reqs) == _outs(ref)
