@@ -1,0 +1,102 @@
+"""Kernel-tuning sweep: default vs tuned block configs per paper config.
+
+Runs the autotuner's microbenchmark sweep (repro.tuning) for every
+grouped-GEMM shape each paper MoE config dispatches, ASSERTS the
+no-regression contract — the swept winner's throughput is >= the
+default config's on the same measurement for EVERY cell (the default is
+always a candidate, so a regression here means the sweep machinery
+itself broke) — and records the table ``analysis/report.py`` renders.
+
+Also records the fused-paged-attention arm per config when present in
+``results/serve/*_smoke.json`` (serving_throughput writes those cells);
+this file's own records are kernel-level.
+
+Records -> results/tuning/<name><suffix>.json, and (with ``--write-cache``)
+the winners overlay into results/tuning/cache.json.
+
+    PYTHONPATH=src python -m benchmarks.kernel_tune --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from benchmarks.common import emit
+from repro.configs import PAPER_CONFIGS
+from repro.tuning import TuneCache, local_cache_path, reset_cache, \
+    tune_moe_layer
+
+
+def run_config(name: str, *, shrink: int, tokens: int, reps: int,
+               scheme: str, cache) -> list:
+    pc = PAPER_CONFIGS[name]
+    d = max(32, pc.d_model // shrink)
+    f = max(32, pc.d_ffn // shrink)
+    rows = []
+    for res in tune_moe_layer(E=pc.n_experts, top_k=pc.top_k, d_model=d,
+                              d_ffn=f, tokens=tokens, scheme=scheme,
+                              reps=reps, cache=cache):
+        w, dflt = res["winner"], res["default"]
+        # the no-regression acceptance criterion: tuned >= default tok/s
+        # on every (config, kernel) cell, measured not assumed
+        assert w["tok_per_s"] >= dflt["tok_per_s"], (name, res)
+        row = {"config": name, "kernel": res["kernel"], "key": res["key"],
+               "shape": res["shape"],
+               "default": {k: dflt[k] for k in
+                           ("block_m", "block_n", "block_k", "us",
+                            "tok_per_s")},
+               "tuned": {k: w[k] for k in
+                         ("block_m", "block_n", "block_k", "us",
+                          "tok_per_s")},
+               "speedup": dflt["us"] / w["us"],
+               "n_candidates": len(res["records"])}
+        rows.append(row)
+        emit(f"tune/{name}/{res['kernel']}", w["us"] * 1e-6,
+             f"default {dflt['us']:.0f}us x{row['speedup']:.2f}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced shapes + 1 rep (CI)")
+    ap.add_argument("--configs", nargs="*", default=sorted(PAPER_CONFIGS),
+                    choices=sorted(PAPER_CONFIGS))
+    ap.add_argument("--tokens", type=int, default=256)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--scheme", default="dense",
+                    choices=("dense", "int8", "int4"))
+    ap.add_argument("--write-cache", action="store_true",
+                    help="persist winners into the local tune cache")
+    ap.add_argument("--out", default="results/tuning")
+    args = ap.parse_args()
+
+    shrink = 32 if args.smoke else 1
+    reps = 1 if args.smoke else args.reps
+    cache = TuneCache() if not args.write_cache else (
+        TuneCache.load(local_cache_path()) or TuneCache())
+    rows = []
+    for name in args.configs:
+        rows.extend(run_config(name, shrink=shrink, tokens=args.tokens,
+                               reps=reps, scheme=args.scheme, cache=cache))
+    assert rows, "no cells swept"
+    assert all(r["tuned"]["tok_per_s"] >= r["default"]["tok_per_s"]
+               for r in rows)        # no regression cell, re-checked flat
+
+    if args.write_cache:
+        cache.save(local_cache_path())
+        reset_cache()
+
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    suffix = "_smoke" if args.smoke else ""
+    doc = {"suffix": suffix, "scheme": args.scheme, "tokens": args.tokens,
+           "reps": reps, "reduced": shrink > 1, "records": rows}
+    path = out_dir / f"kernel_tune{suffix}.json"
+    path.write_text(json.dumps(doc, indent=1, sort_keys=True) + "\n")
+    print(f"wrote {len(rows)} cells -> {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -77,6 +77,82 @@ def run_cell(cfg, params, *, slots: int, policy: str, executor: str,
 
 
 # ----------------------------------------------------------------------
+# Fused vs gathered paged-attention decode (DESIGN.md §12 acceptance)
+# ----------------------------------------------------------------------
+def run_paged_attn_compare(cfg, params, *, slots: int, steps: int,
+                           capacity: int, kv_block: int) -> list:
+    """Steady-state decode at ``slots`` active slots on the pallas
+    executor, ``paged_attn`` fused vs gather.  Greedy tokens must be
+    bitwise-identical (the fused kernel is a bit-for-bit companion of
+    gather+flash); the throughput win is asserted on wall time on TPU
+    and on the analytic HBM traffic everywhere (interpret-mode wall time
+    orders the interpreter, not the memory system):
+
+    * gather: reads the pool to materialize the (B, nb*bs, H, D) view,
+      writes that view, and flash reads it back — 3x the KV bytes;
+    * fused: the kernel DMAs each block-table-indexed tile exactly once.
+    """
+    from repro.kernels import ops
+    cells = {}
+    for mode in ("gather", "fused"):
+        rc = RunConfig(q_chunk=64, kv_chunk=64, executor="pallas",
+                       schedule_policy="dynamic", moe_stats=False,
+                       paged_attn=mode)
+        eng = ServeEngine(cfg, params, slots=slots, capacity=capacity,
+                          rc=rc, kv_block_size=kv_block)
+        assert eng.paged, "fused-vs-gather compare needs the paged cache"
+        rng = np.random.default_rng(0)
+        reqs = [Request(rid=i,
+                        prompt=rng.integers(0, cfg.vocab_size,
+                                            PROMPT_LEN).astype(np.int32),
+                        max_new=capacity)         # never retires in-window
+                for i in range(slots)]
+        for r in reqs:
+            eng.admit(r)
+        assert eng.n_active == slots
+        for _ in range(2):                        # warmup: compile + cache
+            eng.step()
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            assert eng.step() == slots
+        dt = time.perf_counter() - t0
+        # per-step KV traffic of the attention read path: with all slots
+        # active the gathered (B, nb*bs, ...) view IS the pool's extent
+        pool_bytes = sum(leaf.nbytes
+                         for leaf in jax.tree_util.tree_leaves(eng.kv.pools))
+        kv_bytes = pool_bytes * (3 if mode == "gather" else 1)
+        tok_per_s = slots * steps / dt
+        emit(f"paged_attn_{mode}_slots{slots}", dt / steps,
+             f"tok_per_s={tok_per_s:.1f}")
+        cells[mode] = {"paged_attn": mode, "slots": slots, "steps": steps,
+                       "s_per_step": dt / steps, "tok_per_s": tok_per_s,
+                       "kv_bytes_per_step": kv_bytes,
+                       "kv_block": eng.kv_block_size, "on_tpu": ops.on_tpu(),
+                       "outputs": {r.rid: list(r.out) for r in reqs},
+                       "config": eng.describe(seed=0)}
+    fused, gather = cells["fused"], cells["gather"]
+    # the fused kernel must not change a single sampled token
+    assert fused["outputs"] == gather["outputs"], \
+        "fused paged attention changed greedy decode tokens"
+    assert fused["kv_bytes_per_step"] < gather["kv_bytes_per_step"]
+    fused["kv_bytes_win"] = gather["kv_bytes_win"] = \
+        gather["kv_bytes_per_step"] / fused["kv_bytes_per_step"]
+    if ops.on_tpu():
+        assert fused["tok_per_s"] > gather["tok_per_s"], \
+            (f"fused paged decode slower than gather on TPU: "
+             f"{fused['tok_per_s']:.1f} <= {gather['tok_per_s']:.1f} tok/s")
+    print(f"# paged-attn decode @ {slots} slots: "
+          f"{gather['tok_per_s']:.1f} tok/s (gather) vs "
+          f"{fused['tok_per_s']:.1f} tok/s (fused); KV bytes/step "
+          f"{gather['kv_bytes_per_step']:.2e} -> "
+          f"{fused['kv_bytes_per_step']:.2e} "
+          f"({fused['kv_bytes_win']:.1f}x analytic, tokens identical)")
+    for c in cells.values():
+        c.pop("outputs")
+    return [gather, fused]
+
+
+# ----------------------------------------------------------------------
 # Mixed prefill/decode + shared-prefix workload (paged-cache acceptance)
 # ----------------------------------------------------------------------
 def run_workload_cell(cfg, params, *, mode: str, executor: str, slots: int,
@@ -254,8 +330,14 @@ def main():
         shared_prefix = run_shared_prefix_sweep(cfg, params,
                                                 executor=args.executor,
                                                 smoke=args.smoke)
+        # the ≥8-slot fused-vs-gather decode cell (pallas executor; the
+        # modes differ only in the attention read path)
+        paged_attn = run_paged_attn_compare(
+            cfg, params, slots=8, steps=4 if args.smoke else 16,
+            capacity=args.capacity, kv_block=8)
     else:
         shared_prefix = []
+        paged_attn = []
         print(f"# shared-prefix workload skipped: {args.arch} has "
               f"non-pageable caches (contiguous engine only)")
 
@@ -265,7 +347,8 @@ def main():
     out_path = out_dir / f"{args.arch}{suffix}.json"
     out_path.write_text(json.dumps({"arch": args.arch, "reduced": True,
                                     "records": records,
-                                    "shared_prefix": shared_prefix},
+                                    "shared_prefix": shared_prefix,
+                                    "paged_attn": paged_attn},
                                    indent=1))
     print(f"# wrote {out_path}")
 

@@ -172,6 +172,52 @@ def loadgen_table():
     return "\n".join(rows)
 
 
+def tuning_table():
+    """Kernel-autotuner sweep results from benchmarks/kernel_tune.py
+    (results/tuning/kernel_tune*.json): per (paper config, kernel) cell,
+    the hard-coded default tile config vs the swept winner on the same
+    microbenchmark, plus the persistent-cache footprint."""
+    tune_dir = ROOT / "results" / "tuning"
+    rows_in = []
+    for p in sorted(tune_dir.glob("kernel_tune*.json")) \
+            if tune_dir.exists() else []:
+        try:
+            d = json.loads(p.read_text())
+        except (json.JSONDecodeError, UnicodeDecodeError):
+            continue
+        rows_in.extend((d, r) for r in d.get("records") or [])
+    if not rows_in:
+        return ("_(no records — run ``PYTHONPATH=src python -m "
+                "benchmarks.kernel_tune`` to populate results/tuning/)_")
+
+    def blk(c):
+        return f"({c['block_m']},{c['block_n']},{c['block_k']})"
+
+    rows = ["| config | kernel | shape (E,M,K,N) | scheme | "
+            "default blocks / us | tuned blocks / us | speedup | cands |",
+            "|" + "---|" * 8]
+    for doc, r in sorted(rows_in, key=lambda x: (x[1]["config"],
+                                                 x[1]["kernel"])):
+        s = r["shape"]
+        rows.append(
+            f"| {r['config']} | {r['kernel']} | "
+            f"({s['E']},{s['M']},{s['K']},{s['N']}) | {s['scheme']} | "
+            f"{blk(r['default'])} {r['default']['us']:.0f} | "
+            f"{blk(r['tuned'])} {r['tuned']['us']:.0f} | "
+            f"{r['speedup']:.2f}x | {r['n_candidates']} |")
+    cache_p = tune_dir / "cache.json"
+    if cache_p.exists():
+        try:
+            c = json.loads(cache_p.read_text())
+            rows.append(f"\nPersistent cache: {len(c.get('entries', {}))} "
+                        f"entries (version {c.get('version')}, device "
+                        f"{c.get('device') or '?'}) in "
+                        f"results/tuning/cache.json.")
+        except (json.JSONDecodeError, UnicodeDecodeError):
+            pass
+    return "\n".join(rows)
+
+
 def perf_rows(paths, baseline_path, label):
     base = json.loads((ROOT / baseline_path).read_text())
     bc = base["collectives"]["total_bytes"]
@@ -204,6 +250,7 @@ def main():
         sched=scheduling_table(),
         serving=serving_table(),
         loadgen=loadgen_table(),
+        tuning=tuning_table(),
         dryrun=dryrun_table(dr),
         roofline=markdown_table(sorted(
             rl1, key=lambda r: (r.arch, r.shape))),
@@ -308,6 +355,20 @@ contiguous: resume re-prefills), but only while a feasible
 deadline-holder waits:
 
 {loadgen}
+
+## §Kernel autotuning (beyond-paper; DESIGN.md §12)
+
+The cutotune-style sweep (repro.tuning) times every valid
+(block_m, block_n, block_k) tile config of the grouped-GEMM kernels per
+(kernel, shape-bucket, dtype, quant scheme, executor) key and persists
+winners to a versioned JSON cache consulted at trace time when
+``RunConfig.autotune`` is set.  The default config is always a sweep
+candidate, so tuned >= default holds on every recorded cell (asserted in
+CI).  Off-TPU timings order the interpreter, not the MXU — the table
+below is machinery validation; the deployment cache is built on the TPU
+host by ``tools/build_tune_cache.py``:
+
+{tuning}
 
 ## §Dry-run
 

@@ -61,6 +61,9 @@ class MoEDispatchConfig(NamedTuple):
     emit_stats: bool = False         # add ScheduleStats scalars to aux (needs
                                      # RunConfig.moe_stats in the layer scan:
                                      # aux is a fixed carry)
+    autotune: bool = False           # pallas executor: consult the
+                                     # persistent kernel tune cache
+                                     # (repro.tuning) at trace time
 
     @property
     def impl(self) -> str:

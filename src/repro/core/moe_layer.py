@@ -41,6 +41,7 @@ def dispatch_config(moe: MoEConfig, *, executor: str | None = None,
                     schedule_policy: str = "fixed",
                     capacity_factor: float | None = None,
                     block_m_min: int = 8, emit_stats: bool = False,
+                    autotune: bool = False,
                     interpret=None) -> MoEDispatchConfig:
     """``executor`` names a registered backend (repro.execution); ``impl``
     is the deprecated pre-registry alias for it."""
@@ -58,7 +59,8 @@ def dispatch_config(moe: MoEConfig, *, executor: str | None = None,
         schedule_policy=schedule_policy,
         capacity_factor=(moe.capacity_factor if capacity_factor is None
                          else capacity_factor),
-        block_m_min=block_m_min, emit_stats=emit_stats)
+        block_m_min=block_m_min, emit_stats=emit_stats,
+        autotune=autotune)
 
 
 def apply_moe(params, x: jnp.ndarray, cfg: MoEDispatchConfig):

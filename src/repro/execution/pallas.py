@@ -37,19 +37,22 @@ class PallasExecutor(Executor):
         return ops.permute(x, sched, interpret=cfg.interpret)
 
     def expert_ffn(self, xp, w, sched, cfg, row_scale=None):
+        # cfg.autotune: every kernel call consults the persistent tune
+        # cache for its shape key's swept block sizes (repro.tuning)
+        at = getattr(cfg, "autotune", False)
         if cfg.fuse_gate_up:
             h = ops.fused_gate_up(xp, w["w_gate"], w["w_up"], sched,
-                                  interpret=cfg.interpret)
+                                  autotune=at, interpret=cfg.interpret)
         else:
-            g = ops.grouped_gemm(xp, w["w_gate"], sched,
+            g = ops.grouped_gemm(xp, w["w_gate"], sched, autotune=at,
                                  interpret=cfg.interpret)
-            u = ops.grouped_gemm(xp, w["w_up"], sched,
+            u = ops.grouped_gemm(xp, w["w_up"], sched, autotune=at,
                                  interpret=cfg.interpret)
             gf = g.astype(jnp.float32)
             h = ((gf * jax.nn.sigmoid(gf)) * u.astype(jnp.float32)
                  ).astype(xp.dtype)
         return ops.grouped_gemm(h, w["w_down"], sched, row_scale=row_scale,
-                                interpret=cfg.interpret)
+                                autotune=at, interpret=cfg.interpret)
 
     def unpermute(self, y, sched, weights, cfg):
         return ops.unpermute(y, sched, weights, interpret=cfg.interpret)

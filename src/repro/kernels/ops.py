@@ -29,16 +29,45 @@ def _interp(flag: bool | None) -> bool:
     return (not on_tpu()) if flag is None else flag
 
 
+_block_warned: set = set()
+
+
+def _warn_block_once(fn: str, n: int, target: int, got: int) -> None:
+    key = (fn, n, target, got)
+    if key not in _block_warned:
+        _block_warned.add(key)
+        import warnings
+        warnings.warn(
+            f"{fn}: no well-aligned divisor of {n} <= {target}; falling "
+            f"back to block size {got} (correct but slow — pad the dim "
+            "toward a multiple of 128 for MXU-shaped tiles)",
+            RuntimeWarning, stacklevel=3)
+
+
 def pick_block(n: int, target: int, align: int = 128) -> int:
-    """Largest divisor of n that is <= target, preferring MXU alignment."""
-    target = min(n, target)
+    """Largest TRUE divisor of n that is <= target, preferring MXU
+    alignment (multiples of ``align``, then of 8, then any).
+
+    Total: every n >= 1 yields a valid divisor — awkward dims (primes,
+    odd N/K) fall back to the largest unaligned divisor and warn once
+    per (n, target) instead of tripping the kernels' divisibility
+    asserts downstream."""
+    if n < 1:
+        raise ValueError(f"pick_block: non-positive dim {n}")
+    target = max(1, min(n, target))
     for a in (align, 8, 1):
-        if n % a == 0:
-            b = (target // a) * a
-            while b >= a:
-                if n % b == 0:
-                    return b
-                b -= a
+        if n % a:
+            continue
+        b = (target // a) * a
+        while b >= a:
+            if n % b == 0:
+                if b < min(8, target) and n >= 8:
+                    # degenerate: a big dim with only tiny divisors
+                    _warn_block_once("pick_block", n, target, b)
+                return b
+            b -= a
+    # unreachable (a=1 always succeeds at b=1), kept as a total fallback
+    _warn_block_once("pick_block", n, target, 1)
     return 1
 
 
@@ -66,9 +95,33 @@ def _pick_block_k(K: int, target: int, w_format: str) -> int:
     so the logical block must stay even."""
     bk = pick_block(K, target)
     if w_format == "int4":
-        while bk % 2 or K % bk:
+        while bk > 2 and (bk % 2 or K % bk):
             bk -= 1                    # K is even (asserted at pack time)
+        if bk % 2 or K % bk:
+            # total fallback: K even (pack-time invariant) => 2 divides K
+            bk = 2
+            if K % bk:
+                raise ValueError(
+                    f"int4 payload needs an even K divisor; K={K} is odd")
+            _warn_block_once("_pick_block_k", K, target, bk)
     return bk
+
+
+def _tuned_blocks(kernel: str, *, M: int, K: int, N: int, E: int,
+                  dtype, fmt: str, block_n: int, block_k: int):
+    """Trace-time tune-cache consult (DESIGN.md §12): swap the hard-coded
+    block targets for this shape key's swept winner when one exists.
+
+    Shapes are concrete Python ints during tracing, so the lookup runs
+    once per compiled shape and costs nothing per step.  A miss keeps the
+    caller's defaults — an absent/stale cache degrades, never breaks."""
+    from repro.tuning import lookup_block_sizes
+    rec = lookup_block_sizes(kernel, M=M, K=K, N=N, E=E,
+                             dtype=jnp.dtype(dtype).name,
+                             scheme=fmt, executor="pallas")
+    if rec is None:
+        return block_n, block_k
+    return rec["block_n"], rec["block_k"]
 
 
 # ----------------------------------------------------------------------
@@ -100,9 +153,17 @@ def unpermute(y: jnp.ndarray, sched: BlockSchedule,
 def grouped_gemm(x: jnp.ndarray, w, sched: BlockSchedule,
                  row_scale: jnp.ndarray | None = None, *,
                  block_n: int = 512, block_k: int = 512,
+                 autotune: bool = False,
                  interpret: bool | None = None) -> jnp.ndarray:
-    """``w``: (E, K, N) array or a QuantTensor (in-kernel dequant)."""
+    """``w``: (E, K, N) array or a QuantTensor (in-kernel dequant).
+    ``autotune`` consults the persistent tune cache for this shape key's
+    swept (block_n, block_k) winner before the divisor snap."""
     wq, ws, fmt, (K, N) = _weight_operands(w)
+    E = wq.shape[0]
+    if autotune:
+        block_n, block_k = _tuned_blocks(
+            "grouped_gemm", M=x.shape[0], K=K, N=N, E=E, dtype=x.dtype,
+            fmt=fmt, block_n=block_n, block_k=block_k)
     return _gg.grouped_gemm(
         x, wq, sched.block_expert, sched.block_active, row_scale, ws,
         block_m=sched.block_m, w_format=fmt,
@@ -113,13 +174,17 @@ def grouped_gemm(x: jnp.ndarray, w, sched: BlockSchedule,
 
 def fused_gate_up(x: jnp.ndarray, w_gate, w_up,
                   sched: BlockSchedule, *, block_n: int = 512,
-                  block_k: int = 512,
+                  block_k: int = 512, autotune: bool = False,
                   interpret: bool | None = None) -> jnp.ndarray:
     """``w_gate``/``w_up``: (E, K, F) arrays or QuantTensors under ONE
-    scheme (in-kernel dequant)."""
+    scheme (in-kernel dequant).  ``autotune`` as in ``grouped_gemm``."""
     wgq, wsg, fmt_g, (K, F) = _weight_operands(w_gate)
     wuq, wsu, fmt_u, _ = _weight_operands(w_up)
     assert fmt_g == fmt_u, (fmt_g, fmt_u)
+    if autotune:
+        block_n, block_k = _tuned_blocks(
+            "fused_gate_up", M=x.shape[0], K=K, N=F, E=wgq.shape[0],
+            dtype=x.dtype, fmt=fmt_g, block_n=block_n, block_k=block_k)
     return _fgu.fused_gate_up(
         x, wgq, wuq, sched.block_expert, sched.block_active, wsg, wsu,
         block_m=sched.block_m, w_format=fmt_g,

@@ -54,6 +54,18 @@ def main():
     ap.add_argument("--executor", default="xla",
                     choices=available_executors(),
                     help="MoE executor backend (repro.execution registry)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="consult the persistent kernel tune cache "
+                         "(results/tuning/cache.json, DESIGN.md §12) for "
+                         "swept block sizes instead of the hard-coded "
+                         "defaults (pallas executor)")
+    ap.add_argument("--paged-attn", default="auto",
+                    choices=("auto", "fused", "gather"),
+                    help="paged decode attention path: 'fused' = one "
+                         "Pallas kernel walks the block table (no "
+                         "gathered-cache materialization), 'gather' = "
+                         "pool gather + flash, 'auto' = fused iff the "
+                         "executor is pallas")
     ap.add_argument("--schedule-policy", default="dynamic",
                     choices=available_policies(),
                     help="MoE schedule policy (serving default: dynamic)")
@@ -83,6 +95,10 @@ def main():
                          "results/serve/loadgen_<arch>[_smoke].json")
     ap.add_argument("--smoke", action="store_true",
                     help="with --loadgen: tiny trace for CI")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="with --loadgen: advance the virtual clock by "
+                         "the measured per-step wall-time EWMA instead "
+                         "of a fixed 0.05 s (host-dependent goodput)")
     ap.add_argument("--trace", nargs="?", const="results/trace/serve.json",
                     default=None, metavar="PATH",
                     help="write a Chrome-trace/Perfetto JSON of the step "
@@ -150,7 +166,9 @@ def main():
                                       executor=args.executor,
                                       schedule_policy=args.schedule_policy,
                                       quant=quant if cfg.is_moe else "none",
-                                      moe_stats=bool(cfg.is_moe)))
+                                      moe_stats=bool(cfg.is_moe),
+                                      autotune=args.autotune,
+                                      paged_attn=args.paged_attn))
     if engine.paged:
         print(f"paged KV cache: {engine.kv.n_blocks} blocks x "
               f"{engine.kv.block_size} tokens, prefix cache "
@@ -170,7 +188,8 @@ def main():
                             is not None else 0.4,
                             slo_tpot=args.slo_tpot,
                             burst_size=6, prompt_hi=40)
-        rec = replay(engine, trace, clock=clock, step_time=0.05, seed=0,
+        rec = replay(engine, trace, clock=clock,
+                     step_time=None if args.calibrate else 0.05, seed=0,
                      pattern=args.loadgen,
                      max_steps=min(args.max_steps, 1024))
         rec.pop("outputs", None)
@@ -180,7 +199,9 @@ def main():
                                f"{'_smoke' if args.smoke else ''}.json")
         out_path.write_text(json.dumps(
             {"arch": args.arch, "reduced": args.reduce,
-             "virtual_time": True, "records": [rec]}, indent=1))
+             "virtual_time": True,
+             "step_time_mode": rec["step_time_mode"],
+             "records": [rec]}, indent=1))
         print(f"loadgen {args.loadgen}: {rec['completed']}/"
               f"{rec['n_requests']} completed, goodput "
               f"{rec['goodput_rps']:.3f} req/s, attainment "

@@ -216,6 +216,7 @@ def attention_block(p, x: jnp.ndarray, *, n_heads: int, n_kv_heads: int,
                     cache: Optional[dict] = None,
                     cache_pos: Optional[jnp.ndarray] = None,
                     block_tables: Optional[jnp.ndarray] = None,
+                    paged_fused: bool = False,
                     q_chunk: int = 512, kv_chunk: int = 512):
     """Full attention sub-block: project -> rope -> (cache update) -> flash
     -> output projection.  Returns (out, new_cache).
@@ -226,7 +227,13 @@ def attention_block(p, x: jnp.ndarray, *, n_heads: int, n_kv_heads: int,
     ``kv_limit`` mask).  With ``block_tables`` (B, nb) the cache is a paged
     block POOL instead of per-row buffers: writes scatter block-granular
     (``scatter_block_rows``) and reads gather each row's logical view
-    through its table (``gather_block_kv``) — same math, paged storage."""
+    through its table (``gather_block_kv``) — same math, paged storage.
+    ``paged_fused`` replaces that gather + flash with the fused Pallas
+    paged-attention kernel (kernels/paged_attention.py): online softmax
+    walks the block-table-indexed pool tiles directly, so the gathered
+    view never materializes.  ``gather_block_kv`` remains the
+    differential oracle (token-identical greedy decode, asserted in
+    tests/test_paged_attention.py)."""
     from repro.distributed.ctx import constrain
     source_kv = x if xkv is None else xkv
     q, k, v = project_qkv(p, x, source_kv, n_heads, n_kv_heads, head_dim)
@@ -248,6 +255,25 @@ def attention_block(p, x: jnp.ndarray, *, n_heads: int, n_kv_heads: int,
             new_k = scatter_block_rows(cache["k"], k, block_tables, idx)
             new_v = scatter_block_rows(cache["v"], v, block_tables, idx)
             new_cache = {"k": new_k, "v": new_v}
+            if paged_fused:
+                # fused path: attend straight off the pool.  The decode
+                # flash call below runs with qpos=0 (Sq=1), which makes
+                # the window term inert — the fused call mirrors that
+                # exactly (window omitted) so both paths stay bitwise
+                # companions.
+                from repro.kernels.ops import _interp
+                from repro.kernels.paged_attention import \
+                    paged_decode_attention
+                B = q.shape[0]
+                G = n_heads // n_kv_heads
+                qf = q[:, 0].reshape(B, n_kv_heads, G, head_dim)
+                out = paged_decode_attention(
+                    qf, new_k, new_v, block_tables, idx,
+                    scale=head_dim ** -0.5, logit_softcap=logit_softcap,
+                    interpret=_interp(None))
+                out = out.reshape(B, 1, n_heads, -1).astype(q.dtype)
+                out = out.reshape(B, 1, -1)
+                return jnp.dot(out, p["wo"].astype(x.dtype)), new_cache
             k = gather_block_kv(new_k, block_tables).astype(q.dtype)
             v = gather_block_kv(new_v, block_tables).astype(q.dtype)
         else:

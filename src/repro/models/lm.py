@@ -64,6 +64,16 @@ class RunConfig(NamedTuple):
     unroll: bool = False             # python-loop the layer stack (roofline
                                      # validation: cost_analysis counts scan
                                      # bodies once; unrolled counts all)
+    autotune: bool = False           # consult the persistent kernel tune
+                                     # cache (repro.tuning) for swept block
+                                     # sizes at trace time (pallas executor)
+    paged_attn: str = "auto"         # paged decode attention read path:
+                                     # auto   = fused kernel iff executor
+                                     #          is pallas, else gather
+                                     # fused  = always the fused Pallas
+                                     #          paged-attention kernel
+                                     # gather = gather_block_kv + flash
+                                     #          (the differential oracle)
 
 
 # ----------------------------------------------------------------------
@@ -200,7 +210,8 @@ def _apply_moe_ffn(bp, x, cfg: ModelConfig, rc: RunConfig, mode: str):
                            fold_combine=rc.fold_combine,
                            schedule_policy=rc.schedule_policy,
                            capacity_factor=rc.capacity_factor,
-                           emit_stats=_moe_stats_active(rc))
+                           emit_stats=_moe_stats_active(rc),
+                           autotune=rc.autotune)
     if rc.ep:
         from repro.core.distributed import apply_moe_ep
         layout = "replicated" if mode == "decode" else "sharded"
@@ -223,6 +234,16 @@ def apply_block(bp, x, kind: str, cfg: ModelConfig, rc: RunConfig, *,
     if block_tables is not None and kind in ("rwkv", "mamba", "cross"):
         raise ValueError(f"block kind {kind!r} has no positional KV cache "
                          "to page (see serve/kv_cache.py PAGED_KINDS)")
+    if rc.paged_attn not in ("auto", "fused", "gather"):
+        raise ValueError(f"RunConfig.paged_attn={rc.paged_attn!r}; "
+                         "expected auto | fused | gather")
+    # fused Pallas paged-attention read path (kernels/paged_attention.py):
+    # on by default whenever the serving config already runs Pallas
+    # kernels; "gather" keeps gather_block_kv + flash as the oracle
+    paged_fused = (block_tables is not None and mode == "decode"
+                   and (rc.paged_attn == "fused"
+                        or (rc.paged_attn == "auto"
+                            and rc.executor == "pallas")))
 
     if kind == "rwkv":
         h = apply_norm(bp["norm1"], x, cfg.norm)
@@ -251,6 +272,7 @@ def apply_block(bp, x, kind: str, cfg: ModelConfig, rc: RunConfig, *,
             cache=cache.get("kv") if (cache is not None
                                       and mode == "decode") else None,
             cache_pos=cache_pos, block_tables=block_tables,
+            paged_fused=paged_fused,
             q_chunk=(10 ** 9 if mode == "decode" else rc.q_chunk or 10 ** 9),
             kv_chunk=(10 ** 9 if mode == "decode"
                       else rc.kv_chunk or 10 ** 9))
@@ -284,7 +306,7 @@ def apply_block(bp, x, kind: str, cfg: ModelConfig, rc: RunConfig, *,
             o, kv_cache = attention_block(
                 bp["attn"], h, **kw, positions=positions,
                 cache=cache["kv"], cache_pos=cache_pos,
-                block_tables=block_tables)
+                block_tables=block_tables, paged_fused=paged_fused)
         elif mode == "prefill":
             o, _ = attention_block(bp["attn"], h, **kw, positions=positions)
             kv_cache = _prefill_kv_cache(bp["attn"], h, cfg, cache["kv"],

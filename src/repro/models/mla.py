@@ -61,12 +61,17 @@ def _latent(p, x, mla: MLAConfig, positions):
 
 def mla_block(p, x: jnp.ndarray, *, n_heads: int, mla: MLAConfig,
               positions: jnp.ndarray, cache: Optional[dict] = None,
-              cache_pos=None, block_tables=None,
+              cache_pos=None, block_tables=None, paged_fused: bool = False,
               q_chunk: int = 512, kv_chunk: int = 512):
     """Returns (out, new_cache). Cache: {"ckv": (B,S,r), "kr": (B,S,dr)};
     with ``block_tables`` (B, nb) the cache leaves are paged block pools
     (n_blocks, block_size, ...) written block-granular and read through a
-    per-row gather — the latent cache pages exactly like attention K/V."""
+    per-row gather — the latent cache pages exactly like attention K/V.
+    ``paged_fused`` runs absorbed decode through the fused Pallas
+    paged-attention kernel instead: the latent pools are scored in place
+    (q_eff/ckv + q_rope/kr as a two-operand score, ckv doubling as the
+    value), so neither the gathered latent view nor the concatenated key
+    ever materializes."""
     dn, dr, dv = mla.qk_nope_head_dim, mla.qk_rope_head_dim, mla.v_head_dim
     B, S, _ = x.shape
     q_nope, q_rope = _project_q(p, x, n_heads, mla, positions)
@@ -93,6 +98,12 @@ def mla_block(p, x: jnp.ndarray, *, n_heads: int, mla: MLAConfig,
         new_ckv = scatter_block_rows(cache["ckv"], c_kv, block_tables, idx)
         new_kr = scatter_block_rows(cache["kr"], k_rope, block_tables, idx)
         new_cache = {"ckv": new_ckv, "kr": new_kr}
+        if paged_fused:
+            out = _mla_fused_paged_decode(
+                p, q_nope, q_rope, new_ckv, new_kr, block_tables, idx,
+                n_heads=n_heads, mla=mla)
+            out = out.reshape(B, S, n_heads * dv)
+            return jnp.dot(out, p["wo"].astype(x.dtype)), new_cache
         ckv_view = gather_block_kv(new_ckv, block_tables)
         kr_view = gather_block_kv(new_kr, block_tables)
     else:
@@ -106,6 +117,37 @@ def mla_block(p, x: jnp.ndarray, *, n_heads: int, mla: MLAConfig,
         n_heads=n_heads, mla=mla, kv_limit=idx, kv_chunk=kv_chunk)
     out = out.reshape(B, S, n_heads * dv)
     return jnp.dot(out, p["wo"].astype(x.dtype)), new_cache
+
+
+def _mla_fused_paged_decode(p, q_nope, q_rope, ckv_pool, kr_pool, tables,
+                            kv_limit, *, n_heads: int, mla: MLAConfig):
+    """Absorbed MLA decode straight off the latent block pools.
+
+    Mirrors ``mla_absorbed_decode`` over ``gather_block_kv`` views term
+    for term — same absorbed q construction, same two-step scale
+    compensation (pre-scale by ((r+dr)/(dn+dr))^0.5 then the kernel's
+    (r+dr)^-0.5, in the same dtype and order) — but the scores run inside
+    the fused Pallas kernel with ckv/kr as two scalar-prefetch-indexed
+    score operands and ckv as the value.  Returns (B, 1, H, dv)."""
+    from repro.kernels.ops import _interp
+    from repro.kernels.paged_attention import paged_decode_attention
+    dn, dr, dv = mla.qk_nope_head_dim, mla.qk_rope_head_dim, mla.v_head_dim
+    r = mla.kv_lora_rank
+    B = q_nope.shape[0]
+    wkv_b = p["wkv_b"].astype(q_nope.dtype).reshape(r, n_heads, dn + dv)
+    w_k, w_v = wkv_b[..., :dn], wkv_b[..., dn:]
+    q_eff = jnp.einsum("bthd,rhd->bthr", q_nope, w_k)         # (B,1,H,r)
+    comp = jnp.asarray(((r + dr) ** 0.5) / ((dn + dr) ** 0.5),
+                       q_eff.dtype)
+    # (B, 1, H, *) doubles as the kernel's (B, Hkv=1, G=H, *) layout
+    q1 = q_eff * comp
+    q2 = q_rope * comp
+    ckv4 = ckv_pool[:, :, None, :]                            # Hkv=1 axis
+    kr4 = kr_pool[:, :, None, :]
+    ctx = paged_decode_attention(
+        q1, ckv4, ckv4, tables, kv_limit, scale=(r + dr) ** -0.5,
+        q2=q2, k2_pool=kr4, interpret=_interp(None))          # (B,1,H,r)
+    return jnp.einsum("bthr,rhd->bthd", ctx.astype(q_nope.dtype), w_v)
 
 
 def mla_absorbed_decode(p, q_nope, q_rope, ckv, kr, *, n_heads: int,

@@ -672,7 +672,9 @@ class ServeEngine:
              "executor": self.rc.executor,
              "schedule_policy": self.rc.schedule_policy,
              "quant": self.rc.quant, "kv_block_size": self.kv_block_size,
-             "prefill_chunk": self.prefill_chunk if self.paged else 0}
+             "prefill_chunk": self.prefill_chunk if self.paged else 0,
+             "paged_attn": self.rc.paged_attn,
+             "autotune": self.rc.autotune}
         if seed is not None:
             d["seed"] = seed
         return d

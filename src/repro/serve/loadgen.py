@@ -16,8 +16,16 @@ whole replay — tokens, admission order, preemptions, TTFT/TPOT
 percentiles, goodput — is then a pure function of (trace seed, engine
 config), so benchmark assertions like "``slo`` admission beats ``fcfs``
 on the burst workload" are reproducible in CI instead of racing the
-host's scheduler.  (Real wall-clock runs work too: pass a real-time
-``Observability`` bundle and ``step_time=None``.)
+host's scheduler.
+
+**Wall-clock calibration.**  ``step_time=None`` keeps the virtual
+timeline but scales it by MEASUREMENT: each engine step is timed with
+``time.perf_counter`` and the clock advances by an EWMA of the measured
+step wall time (the engine's own ``_ewma_step_s`` is useless here — it
+reads the injected virtual clock).  Goodput/SLO numbers then reflect
+the host's real step cost while arrivals stay trace-deterministic; the
+measured EWMA and the calibration mode are recorded in the artifact's
+config block so a reader can tell the two timelines apart.
 
 Artifacts land in ``results/serve/loadgen_<arch>.json`` via
 ``benchmarks/serve_loadgen.py`` / ``repro.launch.serve --loadgen``;
@@ -26,6 +34,7 @@ Artifacts land in ``results/serve/loadgen_<arch>.json`` via
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import List, Optional
 
 import numpy as np
@@ -121,24 +130,40 @@ def _met_slo(r) -> bool:
 
 
 def replay(engine, trace: List[TraceEvent], *, clock: VirtualClock,
-           step_time: float, max_steps: int = 4096,
+           step_time: Optional[float], max_steps: int = 4096,
            seed: Optional[int] = None, pattern: Optional[str] = None,
-           on_token=None) -> dict:
+           on_token=None, ewma_alpha: float = 0.3) -> dict:
     """Replay ``trace`` through a fresh front-end on ``engine`` and
     score it.  ``clock`` must be the engine's observability clock (the
     replay advances it ``step_time`` per engine step); ``engine`` should
     be freshly constructed (no live slots).
+
+    ``step_time=None`` enables wall-clock calibration: each engine step
+    is timed for real and the clock advances by the running EWMA of the
+    measured step seconds (``ewma_alpha`` weights the newest sample).
+    When the engine idles before the next arrival the clock fast-forwards
+    to it — real deployments sleep there; spinning virtual steps through
+    the gap would just exhaust ``max_steps``.
 
     Returns the artifact record: goodput-under-SLO, slo attainment,
     p50/p99 TTFT/TPOT, preemption/resume counts, per-phase obs counters
     (when a metrics sink is attached), and the self-describing cell
     config."""
     fe = ServingFrontend(engine)
-    engine.step_time_hint = step_time  # price feasibility in replay time
+    calibrated = step_time is None
+    est: Optional[float] = None        # EWMA of measured step seconds
+    if not calibrated:
+        engine.step_time_hint = step_time  # price feasibility in replay time
     handles = []
     i = steps = 0
     while (i < len(trace) or fe.outstanding) and steps < max_steps:
-        clock.advance(step_time)       # time the step about to run takes
+        if calibrated:
+            if not fe.outstanding and i < len(trace):
+                # idle gap: jump to the next arrival instead of spinning
+                clock.advance(max(0.0, trace[i].t - clock.now))
+            clock.advance(est or 0.0)  # the step about to run, estimated
+        else:
+            clock.advance(step_time)   # time the step about to run takes
         while i < len(trace) and trace[i].t <= clock.now:
             ev = trace[i]
             handles.append(fe.submit(ev.prompt, max_new=ev.max_new,
@@ -146,7 +171,15 @@ def replay(engine, trace: List[TraceEvent], *, clock: VirtualClock,
                                      slo_tpot=ev.slo_tpot,
                                      on_token=on_token))
             i += 1
-        fe.poll()
+        if calibrated:
+            t0 = time.perf_counter()
+            fe.poll()
+            dt = time.perf_counter() - t0
+            est = dt if est is None else \
+                (1.0 - ewma_alpha) * est + ewma_alpha * dt
+            engine.step_time_hint = est
+        else:
+            fe.poll()
         steps += 1
     # censored stats for anything unfinished at budget exhaustion
     leftovers = [r for r in handles if not r.done]
@@ -154,14 +187,15 @@ def replay(engine, trace: List[TraceEvent], *, clock: VirtualClock,
         engine.finalize_drops(leftovers)
     n_done = sum(1 for r in handles if r.done)
     n_good = sum(1 for r in handles if _met_slo(r))
-    makespan = max(clock.now, step_time)
+    makespan = max(clock.now, step_time or est or 0.0, 1e-9)
     lat = latency_summary([r for r in handles if r.done])
     rec = {
         "pattern": pattern,
         "n_requests": len(handles),
         "offered": len(trace),
         "steps": steps,
-        "step_time_s": step_time,
+        "step_time_s": step_time if not calibrated else est,
+        "step_time_mode": "calibrated" if calibrated else "fixed",
         "makespan_s": makespan,
         "completed": n_done,
         "dropped": len(handles) - n_done,
@@ -178,6 +212,14 @@ def replay(engine, trace: List[TraceEvent], *, clock: VirtualClock,
         "tpot_p99_s": lat["tpot_s"]["p99"] if lat["tpot_s"] else None,
         "config": engine.describe(seed=seed),
         "outputs": {r.rid: list(r.out) for r in handles},
+    }
+    # calibration provenance lives with the rest of the cell config: a
+    # reader of the artifact must be able to tell measured-wall-scaled
+    # timelines from fixed virtual ones
+    rec["config"]["step_calibration"] = {
+        "mode": rec["step_time_mode"],
+        "ewma_alpha": ewma_alpha if calibrated else None,
+        "measured_step_ewma_s": est,
     }
     if engine.paged:
         rec["kv_stats"] = engine.kv.stats()

@@ -1,0 +1,18 @@
+"""Kernel autotuning: persistent block-size cache + microbenchmark sweeps.
+
+``kernels/ops.py`` consults ``lookup_block_sizes`` at trace time when a
+call carries ``autotune=True`` (threaded from ``RunConfig.autotune``
+through the dispatch config); ``tools/build_tune_cache.py`` and
+``benchmarks/kernel_tune.py`` fill the cache.  DESIGN.md §12.
+"""
+from repro.tuning.cache import (CACHE_VERSION, TuneCache, get_cache,
+                                local_cache_path, lookup_block_sizes,
+                                make_key, reset_cache, shape_bucket)
+from repro.tuning.autotune import (bench, candidate_configs, sweep_kernel,
+                                   tune_moe_layer)
+
+__all__ = [
+    "CACHE_VERSION", "TuneCache", "get_cache", "local_cache_path",
+    "lookup_block_sizes", "make_key", "reset_cache", "shape_bucket",
+    "bench", "candidate_configs", "sweep_kernel", "tune_moe_layer",
+]

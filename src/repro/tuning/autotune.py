@@ -1,0 +1,179 @@
+"""Microbenchmark sweeps that fill the tune cache.
+
+Sweeps run the RAW Pallas kernels (repro.kernels.grouped_gemm /
+fused_gate_up) on synthetic operands with a round-robin block schedule —
+the schedule's content does not change the kernel's tile geometry, which
+is all the sweep measures.  Every candidate list ALWAYS contains the
+hard-coded default config, and the winner is the argmin over min-of-reps
+wall times of the same measurement — so ``winner <= default`` holds by
+construction on the recorded numbers, which is exactly the no-regression
+property the CI tune-smoke job asserts.
+
+Off-TPU the kernels run in interpret mode: timings there order the
+*interpreter's* cost, not the MXU's — fine for exercising the machinery
+(CI), meaningless as a deployment cache.  ``tools/build_tune_cache.py``
+refuses to ship a packaged cache from a non-TPU backend unless forced.
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import fused_gate_up as _fgu
+from repro.kernels import grouped_gemm as _gg
+from repro.kernels import ops
+from repro.tuning.cache import TuneCache, make_key
+
+DEFAULT_TARGETS = (128, 256, 512, 1024)
+DEFAULT_BLOCK = 512            # the pre-autotuner hard-coded target
+BLOCK_M_TARGETS = (64, 128, 256)
+
+
+def candidate_configs(M: int, K: int, N: int, fmt: str = "dense", *,
+                      targets: Sequence[int] = DEFAULT_TARGETS,
+                      block_m_targets: Sequence[int] = BLOCK_M_TARGETS,
+                      block_m: Optional[int] = None
+                      ) -> Tuple[List[Tuple[int, int, int]],
+                                 Tuple[int, int, int]]:
+    """All distinct valid (block_m, block_n, block_k) tile configs the
+    target grid induces, plus the default config (always a member)."""
+    bms = ([block_m] if block_m else
+           sorted({ops.pick_block(M, t, align=8) for t in block_m_targets}))
+    cands = set()
+    for bm, tn, tk in itertools.product(bms, targets, targets):
+        cands.add((bm, ops.pick_block(N, tn), ops._pick_block_k(K, tk, fmt)))
+    default = (block_m or ops.pick_block(M, 128, align=8),
+               ops.pick_block(N, DEFAULT_BLOCK),
+               ops._pick_block_k(K, DEFAULT_BLOCK, fmt))
+    cands.add(default)
+    return sorted(cands), default
+
+
+def bench(fn, *args, reps: int = 3, warmup: int = 1) -> float:
+    """Min-of-reps wall seconds (min is the standard autotune statistic:
+    it rejects one-sided scheduler noise)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _operands(E: int, M: int, K: int, N: int, fmt: str, dtype, seed: int):
+    """Synthetic x/w(/scales) + a round-robin schedule at block size bm."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((M, K)), dtype)
+    if fmt == "dense":
+        w = jnp.asarray(rng.standard_normal((E, K, N)), dtype)
+        ws = None
+    elif fmt == "int8":
+        w = jnp.asarray(rng.integers(-127, 128, (E, K, N)), jnp.int8)
+        ws = jnp.asarray(rng.uniform(0.005, 0.02, (E, N)), jnp.float32)
+    elif fmt == "int4":
+        assert K % 2 == 0, K
+        w = jnp.asarray(rng.integers(-128, 128, (E, K // 2, N)), jnp.int8)
+        ws = jnp.asarray(rng.uniform(0.05, 0.2, (E, N)), jnp.float32)
+    else:
+        raise ValueError(fmt)
+    return x, w, ws
+
+
+def _schedule(E: int, M: int, bm: int):
+    nb = M // bm
+    be = jnp.asarray(np.arange(nb) % E, jnp.int32)
+    ba = jnp.ones((nb,), jnp.int32)
+    return be, ba
+
+
+def sweep_kernel(kernel: str, *, E: int, M: int, K: int, N: int,
+                 scheme: str = "dense", dtype=jnp.float32,
+                 executor: str = "pallas", reps: int = 3,
+                 block_m: Optional[int] = None, seed: int = 0,
+                 targets: Sequence[int] = DEFAULT_TARGETS,
+                 interpret: Optional[bool] = None) -> dict:
+    """Time every candidate config of one kernel at one shape key.
+
+    Returns ``{"key", "kernel", "shape", "records", "winner", "default"}``
+    where records carry (block_m, block_n, block_k, us, tok_per_s) and
+    winner/default are the argmin / default-config records.
+    """
+    if executor != "pallas":
+        raise ValueError(f"only the pallas executor has tunable tiles "
+                         f"(got {executor!r}); the xla scan owns no "
+                         "block_n/block_k")
+    if kernel not in ("grouped_gemm", "fused_gate_up"):
+        raise ValueError(kernel)
+    interp = ops._interp(interpret)
+    x, w, ws = _operands(E, M, K, N, scheme, dtype, seed)
+    cands, default = candidate_configs(M, K, N, scheme, targets=targets,
+                                       block_m=block_m)
+
+    def run(bm: int, bn: int, bk: int) -> float:
+        be, ba = _schedule(E, M, bm)
+        if kernel == "grouped_gemm":
+            fn = lambda: _gg.grouped_gemm(
+                x, w, be, ba, None, ws, block_m=bm, block_n=bn, block_k=bk,
+                w_format=scheme, interpret=interp)
+        else:
+            fn = lambda: _fgu.fused_gate_up(
+                x, w, w, be, ba, ws, ws, block_m=bm, block_n=bn, block_k=bk,
+                w_format=scheme, interpret=interp)
+        return bench(fn, reps=reps)
+
+    records = []
+    for bm, bn, bk in cands:
+        sec = run(bm, bn, bk)
+        records.append({"block_m": bm, "block_n": bn, "block_k": bk,
+                        "us": sec * 1e6, "tok_per_s": M / sec,
+                        "is_default": (bm, bn, bk) == default})
+    winner = min(records, key=lambda r: r["us"])
+    default_rec = next(r for r in records if r["is_default"])
+    dt = jnp.dtype(dtype).name
+    return {"key": make_key(kernel, M=M, K=K, N=N, E=E, dtype=dt,
+                            scheme=scheme, executor=executor),
+            "kernel": kernel, "executor": executor,
+            "shape": {"E": E, "M": M, "K": K, "N": N, "dtype": dt,
+                      "scheme": scheme},
+            "records": records, "winner": winner, "default": default_rec}
+
+
+# kernel -> (K, N) as a function of (d_model, d_ffn): the three grouped
+# GEMM shapes one MoE layer issues (gate+up fused, down projection, and
+# the unfused-ablation up/gate shape shares fused_gate_up's geometry)
+LAYER_SHAPES = {
+    "fused_gate_up": lambda d, f: (d, f),       # (E,d,f) x2 -> silu*up
+    "grouped_gemm": lambda d, f: (f, d),        # down: (E,f,d)
+}
+
+
+def tune_moe_layer(*, E: int, top_k: int, d_model: int, d_ffn: int,
+                   tokens: int = 256, scheme: str = "dense",
+                   dtype=jnp.float32, reps: int = 3,
+                   targets: Sequence[int] = DEFAULT_TARGETS,
+                   cache: Optional[TuneCache] = None,
+                   seed: int = 0) -> List[dict]:
+    """Sweep every kernel shape one MoE layer dispatches at ~``tokens``
+    routed tokens, recording winners into ``cache`` when given."""
+    from repro.tuning.cache import shape_bucket
+    M = shape_bucket(tokens * top_k)            # padded capacity bucket
+    out = []
+    for kernel, shape_fn in LAYER_SHAPES.items():
+        K, N = shape_fn(d_model, d_ffn)
+        res = sweep_kernel(kernel, E=E, M=M, K=K, N=N, scheme=scheme,
+                           dtype=dtype, reps=reps, targets=targets,
+                           seed=seed)
+        if cache is not None:
+            win = res["winner"]
+            cache.put(res["key"], block_m=win["block_m"],
+                      block_n=win["block_n"], block_k=win["block_k"],
+                      us=win["us"], default_us=res["default"]["us"])
+        out.append(res)
+    return out

@@ -1,0 +1,155 @@
+"""Persistent kernel-config cache: the autotuner's memory.
+
+The cutotune-style contract (ROADMAP item 2): winning (block_m, block_n,
+block_k) configs are keyed by
+
+    ``<kernel>|E<E>|K<K>|N<N>|M<bucket>|<dtype>|<scheme>|<executor>``
+
+where the M axis is a power-of-two *shape bucket* (decode capacities vary
+step to step; tile choice does not care about the exact row count) and
+``scheme`` is the kernel-level weight format (``dense``/``int8``/``int4``
+— what the in-kernel dequant actually sees, DESIGN.md §8).
+
+Two layers overlay:
+
+* **packaged defaults** — ``default_cache.json`` next to this module,
+  shipped with the repo (built by ``tools/build_tune_cache.py`` at the
+  paper shapes);
+* **local results** — ``results/tuning/cache.json`` (override with
+  ``$REPRO_TUNE_CACHE``), written by the build tool / sweeps on the
+  deployment machine.  Local entries win.
+
+Files are versioned: a ``version`` mismatch (or unreadable JSON) silently
+invalidates the whole file — stale caches degrade to the hard-coded
+defaults, never to a crash.  ``kernels/ops.py`` consults ``lookup_block_
+sizes`` at *trace* time (shapes are concrete Python ints while jax
+traces), so a cache hit costs nothing per step.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+from typing import Dict, Optional
+
+CACHE_VERSION = 1
+ENV_CACHE = "REPRO_TUNE_CACHE"
+LOCAL_CACHE = os.path.join("results", "tuning", "cache.json")
+_PACKAGED = pathlib.Path(__file__).with_name("default_cache.json")
+
+
+def shape_bucket(m: int) -> int:
+    """Next power of two >= m (min 8): the M axis of the cache key."""
+    b = 8
+    while b < m:
+        b *= 2
+    return b
+
+
+def make_key(kernel: str, *, M: int, K: int, N: int, E: int,
+             dtype: str = "float32", scheme: str = "dense",
+             executor: str = "pallas") -> str:
+    """The canonical cache key. M is bucketed; everything else is exact."""
+    return (f"{kernel}|E{E}|K{K}|N{N}|M{shape_bucket(M)}"
+            f"|{dtype}|{scheme}|{executor}")
+
+
+class TuneCache:
+    """A dict of key -> winning config record, JSON round-trippable.
+
+    Record schema: ``{"block_m", "block_n", "block_k", "us",
+    "default_us", "source"}`` — the winner's tile sizes, its measured
+    microbenchmark time, the default config's time on the same
+    measurement, and where the entry came from (``swept``/``manual``).
+    """
+
+    def __init__(self, entries: Optional[Dict[str, dict]] = None,
+                 device: str = ""):
+        self.entries: Dict[str, dict] = dict(entries or {})
+        self.device = device
+
+    # -- persistence ----------------------------------------------------
+    def to_doc(self) -> dict:
+        return {"version": CACHE_VERSION, "device": self.device,
+                "entries": self.entries}
+
+    @classmethod
+    def from_doc(cls, doc: dict) -> "TuneCache":
+        if not isinstance(doc, dict) or doc.get("version") != CACHE_VERSION:
+            raise ValueError(
+                f"tune cache version {doc.get('version') if isinstance(doc, dict) else doc!r} "
+                f"!= {CACHE_VERSION} (stale cache; rebuild with "
+                "tools/build_tune_cache.py)")
+        return cls(doc.get("entries", {}), doc.get("device", ""))
+
+    @classmethod
+    def load(cls, path) -> Optional["TuneCache"]:
+        """None on missing / unreadable / version-mismatched files — a
+        stale cache invalidates itself rather than erroring."""
+        try:
+            with open(path) as f:
+                return cls.from_doc(json.load(f))
+        except (OSError, ValueError, json.JSONDecodeError):
+            return None
+
+    def save(self, path) -> None:
+        p = pathlib.Path(path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps(self.to_doc(), indent=1, sort_keys=True)
+                     + "\n")
+
+    # -- access ---------------------------------------------------------
+    def lookup(self, key: str) -> Optional[dict]:
+        return self.entries.get(key)
+
+    def put(self, key: str, *, block_m: int, block_n: int, block_k: int,
+            us: Optional[float] = None, default_us: Optional[float] = None,
+            source: str = "swept") -> dict:
+        rec = {"block_m": int(block_m), "block_n": int(block_n),
+               "block_k": int(block_k), "source": source}
+        if us is not None:
+            rec["us"] = float(us)
+        if default_us is not None:
+            rec["default_us"] = float(default_us)
+        self.entries[key] = rec
+        return rec
+
+    def merge(self, other: Optional["TuneCache"]) -> "TuneCache":
+        """Overlay ``other`` on top of self (other's entries win)."""
+        if other is not None:
+            self.entries.update(other.entries)
+            self.device = other.device or self.device
+        return self
+
+
+def local_cache_path() -> str:
+    return os.environ.get(ENV_CACHE, LOCAL_CACHE)
+
+
+_ACTIVE: Optional[TuneCache] = None
+
+
+def get_cache() -> TuneCache:
+    """The process-wide cache: packaged defaults overlaid by the local
+    results file.  Loaded lazily once; ``reset_cache()`` drops it (tests,
+    and tools that just rewrote the local file)."""
+    global _ACTIVE
+    if _ACTIVE is None:
+        base = TuneCache.load(_PACKAGED) or TuneCache()
+        _ACTIVE = base.merge(TuneCache.load(local_cache_path()))
+    return _ACTIVE
+
+
+def reset_cache() -> None:
+    global _ACTIVE
+    _ACTIVE = None
+
+
+def lookup_block_sizes(kernel: str, *, M: int, K: int, N: int, E: int,
+                       dtype: str = "float32", scheme: str = "dense",
+                       executor: str = "pallas") -> Optional[dict]:
+    """Trace-time consult: the winning record for this call's shape key,
+    or None (caller keeps its hard-coded defaults)."""
+    return get_cache().lookup(make_key(
+        kernel, M=M, K=K, N=N, E=E, dtype=dtype, scheme=scheme,
+        executor=executor))

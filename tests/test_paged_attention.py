@@ -1,0 +1,235 @@
+"""Fused Pallas paged-attention decode: parity against the gather oracle.
+
+Kernel level: ``paged_decode_attention`` vs a dense fp32 reference over
+``gather_block_kv`` views — masks (kv_limit scalar/vector, causal,
+sliding window), logit softcap, the MLA two-term latent score, a block-
+size grid, and physical-block-permutation invariance.
+
+Serve level: THE acceptance criterion — greedy tokens are identical
+across contiguous / paged-gather / paged-fused engines on dense, MoE and
+MLA architectures (the fused kernel must not change a single sampled
+token)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.kernels.paged_attention import paged_decode_attention
+from repro.models import RunConfig, init_params
+from repro.models.attention import gather_block_kv
+from repro.serve.engine import Request, ServeEngine
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Dense reference (explicit masks, fp32) over the gathered view
+# ---------------------------------------------------------------------------
+def ref_paged_decode(q, k_pool, v_pool, tables, kv_limit, *, scale=None,
+                     q_pos=None, causal=False, window=None,
+                     logit_softcap=None, q2=None, k2_pool=None):
+    B, Hkv, G, D = q.shape
+    bs = k_pool.shape[1]
+    S = tables.shape[1] * bs
+    k = gather_block_kv(k_pool, tables)           # (B, S, Hkv, D)
+    v = gather_block_kv(v_pool, tables)
+    if scale is None:
+        scale = D ** -0.5
+    qs = (q * jnp.asarray(scale, q.dtype)).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bshd->bhgs", qs, k.astype(jnp.float32))
+    if q2 is not None:
+        q2s = (q2 * jnp.asarray(scale, q2.dtype)).astype(jnp.float32)
+        k2 = gather_block_kv(k2_pool, tables).astype(jnp.float32)
+        s = s + jnp.einsum("bhgd,bshd->bhgs", q2s, k2)
+    if logit_softcap:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+    kpos = jnp.arange(S)[None, None, None, :]
+    lim = jnp.broadcast_to(jnp.asarray(kv_limit), (B,))
+    ok = kpos <= lim[:, None, None, None]
+    if causal:
+        ok = ok & (kpos <= q_pos[:, None, None, None])
+    if window is not None:
+        ok = ok & (kpos > q_pos[:, None, None, None] - window)
+    s = jnp.where(ok, s, NEG_INF)
+    m = jnp.max(s, -1, keepdims=True)
+    p = jnp.where(ok, jnp.exp(s - m), 0.0)
+    l = jnp.sum(p, -1, keepdims=True)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
+    out = jnp.where(l > 0, out / jnp.maximum(l, 1e-30), 0.0)
+    return out.astype(q.dtype)
+
+
+def _pools(rng, *, n_blocks=8, bs=4, Hkv=2, D=16, Dv=None):
+    Dv = D if Dv is None else Dv
+    k = jnp.asarray(rng.standard_normal((n_blocks, bs, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((n_blocks, bs, Hkv, Dv)),
+                    jnp.float32)
+    return k, v
+
+
+def _case(seed=0, *, B=3, nb=2, n_blocks=8, bs=4, Hkv=2, G=2, D=16,
+          Dv=None):
+    rng = np.random.default_rng(seed)
+    k_pool, v_pool = _pools(rng, n_blocks=n_blocks, bs=bs, Hkv=Hkv, D=D,
+                            Dv=Dv)
+    q = jnp.asarray(rng.standard_normal((B, Hkv, G, D)), jnp.float32)
+    # distinct physical blocks per row (the engine never aliases rows)
+    tables = jnp.asarray(
+        rng.permutation(n_blocks)[:B * nb].reshape(B, nb), jnp.int32)
+    lim = jnp.asarray(rng.integers(0, nb * bs, B), jnp.int32)
+    return q, k_pool, v_pool, tables, lim
+
+
+def _close(a, b):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_matches_oracle_basic():
+    q, kp, vp, t, lim = _case(0)
+    out = paged_decode_attention(q, kp, vp, t, lim, interpret=True)
+    _close(out, ref_paged_decode(q, kp, vp, t, lim))
+
+
+def test_scalar_kv_limit_and_scale():
+    q, kp, vp, t, _ = _case(1)
+    out = paged_decode_attention(q, kp, vp, t, jnp.int32(5), scale=0.3,
+                                 interpret=True)
+    _close(out, ref_paged_decode(q, kp, vp, t, jnp.int32(5), scale=0.3))
+
+
+def test_causal_and_window_masks():
+    q, kp, vp, t, lim = _case(2)
+    qpos = jnp.asarray([1, 4, 7], jnp.int32)
+    for win in (None, 3):
+        out = paged_decode_attention(q, kp, vp, t, lim, q_pos=qpos,
+                                     causal=True, window=win,
+                                     interpret=True)
+        _close(out, ref_paged_decode(q, kp, vp, t, lim, q_pos=qpos,
+                                     causal=True, window=win))
+
+
+def test_logit_softcap():
+    q, kp, vp, t, lim = _case(3)
+    out = paged_decode_attention(q, kp, vp, t, lim, logit_softcap=8.0,
+                                 interpret=True)
+    _close(out, ref_paged_decode(q, kp, vp, t, lim, logit_softcap=8.0))
+
+
+def test_mla_two_term_latent_score():
+    """MLA absorbed decode: s = q_eff @ ckv^T + q_rope @ kr^T with the
+    latent ckv doubling as the value (Dv=D of the latent, D2 rope depth)."""
+    rng = np.random.default_rng(4)
+    B, nb, n_blocks, bs, H, r, dr = 2, 2, 6, 4, 3, 16, 8
+    ckv, _ = _pools(rng, n_blocks=n_blocks, bs=bs, Hkv=1, D=r)
+    kr, _ = _pools(rng, n_blocks=n_blocks, bs=bs, Hkv=1, D=dr)
+    q1 = jnp.asarray(rng.standard_normal((B, 1, H, r)), jnp.float32)
+    q2 = jnp.asarray(rng.standard_normal((B, 1, H, dr)), jnp.float32)
+    t = jnp.asarray(rng.permutation(n_blocks)[:B * nb].reshape(B, nb),
+                    jnp.int32)
+    lim = jnp.asarray([3, 6], jnp.int32)
+    sc = (r + dr) ** -0.5
+    out = paged_decode_attention(q1, ckv, ckv, t, lim, scale=sc, q2=q2,
+                                 k2_pool=kr, interpret=True)
+    _close(out, ref_paged_decode(q1, ckv, ckv, t, lim, scale=sc, q2=q2,
+                                 k2_pool=kr))
+
+
+@pytest.mark.parametrize("bs,nb", [(2, 5), (4, 3), (8, 2)])
+def test_block_size_grid(bs, nb):
+    q, kp, vp, t, lim = _case(5 + bs, nb=nb, n_blocks=3 * nb + 2, bs=bs)
+    out = paged_decode_attention(q, kp, vp, t, lim, interpret=True)
+    _close(out, ref_paged_decode(q, kp, vp, t, lim))
+
+
+def test_physical_block_permutation_invariance():
+    """Relabeling physical blocks (pool rows permuted, tables remapped)
+    must reproduce the output BITWISE: the kernel walks blocks in logical
+    table order, so the accumulation order never changes."""
+    q, kp, vp, t, lim = _case(6)
+    out = paged_decode_attention(q, kp, vp, t, lim, interpret=True)
+    perm = np.random.default_rng(7).permutation(kp.shape[0])
+    inv = np.argsort(perm)
+    out_p = paged_decode_attention(q, kp[inv], vp[inv],
+                                   jnp.asarray(perm, jnp.int32)[t], lim,
+                                   interpret=True)
+    assert np.array_equal(np.asarray(out), np.asarray(out_p))
+
+
+def test_unallocated_entries_masked():
+    """Table entries past kv_limit may point at ARBITRARY blocks; poisoning
+    them with huge values must not leak into the output."""
+    q, kp, vp, t, _ = _case(8)
+    lim = jnp.asarray([2, 2, 2], jnp.int32)     # only block 0 attended
+    out = paged_decode_attention(q, kp, vp, t, lim, interpret=True)
+    poison = kp.at[np.asarray(t[:, 1])].set(1e4)
+    poison_v = vp.at[np.asarray(t[:, 1])].set(1e4)
+    out_p = paged_decode_attention(q, poison, poison_v, t, lim,
+                                   interpret=True)
+    assert np.array_equal(np.asarray(out), np.asarray(out_p))
+
+
+def test_causal_requires_q_pos():
+    q, kp, vp, t, lim = _case(9)
+    with pytest.raises(ValueError):
+        paged_decode_attention(q, kp, vp, t, lim, causal=True,
+                               interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# Serve-level greedy token identity: contiguous vs gather vs fused
+# ---------------------------------------------------------------------------
+def _greedy_outs(cfg, params, reqs, *, kv_block, paged_attn,
+                 executor="pallas"):
+    rc = RunConfig(q_chunk=16, kv_chunk=16, executor=executor,
+                   paged_attn=paged_attn)
+    clones = [Request(rid=r.rid, prompt=r.prompt, max_new=r.max_new)
+              for r in reqs]
+    eng = ServeEngine(cfg, params, slots=2, capacity=32, rc=rc,
+                      kv_block_size=kv_block, prefill_chunk=3)
+    eng.run(clones, max_steps=128)
+    assert all(r.done for r in clones)
+    return {r.rid: list(r.out) for r in clones}
+
+
+def _reqs(cfg, n, seed=0, max_new=4):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        rng.integers(3, 8)).astype(np.int32),
+                    max_new=max_new)
+            for i in range(n)]
+
+
+@pytest.mark.parametrize("arch,block", [
+    ("smollm-360m", 4),                  # dense GQA
+    ("moonshot-v1-16b-a3b", 4),          # MoE
+    ("moonshot-v1-16b-a3b", 8),          # MoE, block-size axis
+    ("deepseek-v2-236b", 4),             # MLA latent cache
+])
+def test_fused_decode_token_identity(arch, block):
+    """Greedy serving tokens must be identical across the contiguous
+    cache, the paged gather path, and the fused paged-attention kernel —
+    on dense, MoE and MLA configs and across block sizes."""
+    cfg = reduced(get_config(arch), layers=2, d_model=32, vocab=128)
+    params = init_params(cfg, jax.random.key(0))
+    reqs = _reqs(cfg, 3, seed=block)
+    fused = _greedy_outs(cfg, params, reqs, kv_block=block,
+                         paged_attn="fused")
+    gather = _greedy_outs(cfg, params, reqs, kv_block=block,
+                          paged_attn="gather")
+    contig = _greedy_outs(cfg, params, reqs, kv_block=0,
+                          paged_attn="auto")
+    assert fused == gather == contig
+
+
+def test_rc_paged_attn_validated():
+    cfg = reduced(get_config("smollm-360m"), layers=1, d_model=32,
+                  vocab=128)
+    params = init_params(cfg, jax.random.key(0))
+    rc = RunConfig(q_chunk=16, kv_chunk=16, paged_attn="bogus")
+    eng = ServeEngine(cfg, params, slots=1, capacity=16, rc=rc,
+                      kv_block_size=4)
+    with pytest.raises(ValueError, match="paged_attn"):
+        eng.run(_reqs(cfg, 1), max_steps=8)

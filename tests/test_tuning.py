@@ -1,0 +1,219 @@
+"""Kernel autotuner: cache round-trip + versioning, key schema, the
+trace-time ops consult, sweep no-regression, and pick_block totality."""
+import json
+import warnings
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops
+from repro.scheduling import BlockSchedule
+from repro.tuning import (CACHE_VERSION, TuneCache, candidate_configs,
+                          make_key, reset_cache, shape_bucket, sweep_kernel,
+                          tune_moe_layer)
+
+
+def _round_robin_sched(E, M, block_m):
+    """Minimal schedule for the raw-kernel call paths ops.grouped_gemm
+    consumes (block_expert / block_active / block_m)."""
+    nb = M // block_m
+    z = jnp.zeros((1,), jnp.int32)
+    return BlockSchedule(
+        counts=jnp.zeros((E,), jnp.int32),
+        group_offsets=jnp.zeros((E + 1,), jnp.int32),
+        src_tok=z, pos=z[None],
+        block_expert=jnp.asarray(np.arange(nb) % E, jnp.int32),
+        block_active=jnp.ones((nb,), jnp.int32),
+        capacity=M, block_m=block_m)
+
+
+# ---------------------------------------------------------------------------
+# Cache persistence
+# ---------------------------------------------------------------------------
+def test_cache_roundtrip(tmp_path):
+    c = TuneCache(device="cpu")
+    key = make_key("grouped_gemm", M=100, K=64, N=32, E=4)
+    c.put(key, block_m=64, block_n=32, block_k=16, us=12.5, default_us=20.0)
+    path = tmp_path / "cache.json"
+    c.save(path)
+    back = TuneCache.load(path)
+    assert back is not None
+    assert back.device == "cpu"
+    assert back.entries == c.entries
+    assert back.lookup(key)["block_n"] == 32
+
+
+def test_version_mismatch_invalidates(tmp_path):
+    path = tmp_path / "cache.json"
+    doc = TuneCache().to_doc()
+    doc["version"] = CACHE_VERSION + 1
+    path.write_text(json.dumps(doc))
+    assert TuneCache.load(path) is None          # stale -> degrade, no crash
+    with pytest.raises(ValueError):
+        TuneCache.from_doc(doc)
+
+
+def test_corrupt_or_missing_file_returns_none(tmp_path):
+    bad = tmp_path / "cache.json"
+    bad.write_text("{not json")
+    assert TuneCache.load(bad) is None
+    assert TuneCache.load(tmp_path / "absent.json") is None
+
+
+def test_merge_local_overlays_packaged():
+    key = make_key("grouped_gemm", M=8, K=16, N=16, E=2)
+    base = TuneCache({key: {"block_m": 8, "block_n": 512, "block_k": 512}})
+    local = TuneCache({key: {"block_m": 8, "block_n": 128, "block_k": 64}},
+                      device="tpu")
+    merged = base.merge(local)
+    assert merged.lookup(key)["block_n"] == 128  # local wins
+    assert merged.device == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Key schema
+# ---------------------------------------------------------------------------
+def test_key_schema_and_shape_bucket():
+    assert shape_bucket(1) == 8 and shape_bucket(8) == 8
+    assert shape_bucket(9) == 16 and shape_bucket(1000) == 1024
+    key = make_key("fused_gate_up", M=300, K=64, N=256, E=8,
+                   dtype="bfloat16", scheme="int8", executor="pallas")
+    assert key == "fused_gate_up|E8|K64|N256|M512|bfloat16|int8|pallas"
+    # same bucket -> same key; different quant scheme -> different key
+    assert key == make_key("fused_gate_up", M=511, K=64, N=256, E=8,
+                           dtype="bfloat16", scheme="int8")
+    assert key != make_key("fused_gate_up", M=300, K=64, N=256, E=8,
+                           dtype="bfloat16", scheme="int4")
+
+
+# ---------------------------------------------------------------------------
+# Trace-time consult in kernels/ops.py
+# ---------------------------------------------------------------------------
+@pytest.fixture
+def env_cache(tmp_path, monkeypatch):
+    """Point the process-wide cache at a fresh tmp file."""
+    path = tmp_path / "cache.json"
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(path))
+    reset_cache()
+    yield path
+    reset_cache()
+
+
+def test_tuned_blocks_consults_cache(env_cache):
+    key = make_key("grouped_gemm", M=16, K=32, N=64, E=2)
+    c = TuneCache()
+    c.put(key, block_m=8, block_n=16, block_k=8)
+    c.save(env_cache)
+    reset_cache()
+    assert ops._tuned_blocks("grouped_gemm", M=16, K=32, N=64, E=2,
+                             dtype=jnp.float32, fmt="dense",
+                             block_n=512, block_k=512) == (16, 8)
+    # miss (different N) -> caller defaults untouched
+    assert ops._tuned_blocks("grouped_gemm", M=16, K=32, N=128, E=2,
+                             dtype=jnp.float32, fmt="dense",
+                             block_n=512, block_k=512) == (512, 512)
+
+
+def test_autotuned_grouped_gemm_matches_default(env_cache):
+    """A cache hit changes only the tile geometry, never the numbers."""
+    E, M, K, N = 2, 16, 32, 64
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((E, K, N)), jnp.float32)
+    sched = _round_robin_sched(E, M, 8)
+    base = ops.grouped_gemm(x, w, sched, interpret=True)
+    c = TuneCache()
+    c.put(make_key("grouped_gemm", M=M, K=K, N=N, E=E),
+          block_m=8, block_n=16, block_k=8)
+    c.save(env_cache)
+    reset_cache()
+    tuned = ops.grouped_gemm(x, w, sched, autotune=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(tuned), np.asarray(base),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_invalid_cache_blocks_are_snapped(env_cache):
+    """pick_block is the safety net: a cache record with a non-divisor
+    block must not trip the kernel's divisibility asserts."""
+    E, M, K, N = 2, 16, 32, 64
+    c = TuneCache()
+    c.put(make_key("grouped_gemm", M=M, K=K, N=N, E=E),
+          block_m=8, block_n=48, block_k=7)      # neither divides
+    c.save(env_cache)
+    reset_cache()
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((E, K, N)), jnp.float32)
+    out = ops.grouped_gemm(x, w, _round_robin_sched(E, M, 8),
+                           autotune=True, interpret=True)
+    assert out.shape == (M, N)
+
+
+# ---------------------------------------------------------------------------
+# pick_block totality + warn-once
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n", [1, 2, 3, 7, 8, 12, 16, 100, 127, 128, 384,
+                               1009, 2018, 4096])
+@pytest.mark.parametrize("target", [1, 4, 8, 128, 512])
+def test_pick_block_always_divides(n, target):
+    b = ops.pick_block(n, target)
+    assert 1 <= b <= n and n % b == 0 and b <= max(1, min(n, target))
+
+
+def test_pick_block_warns_once_on_degenerate_fallback():
+    ops._block_warned.clear()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        b = ops.pick_block(10007, 512)           # prime: only divisor is 1
+        assert b == 1
+        assert len(rec) == 1 and issubclass(rec[0].category, RuntimeWarning)
+        ops.pick_block(10007, 512)               # same key: silent
+        assert len(rec) == 1
+        ops.pick_block(12, 512)                  # fine divisor: no warning
+        assert len(rec) == 1
+
+
+def test_pick_block_k_int4_even_invariant():
+    assert ops._pick_block_k(32, 512, "int4") % 2 == 0
+    assert ops._pick_block_k(6, 512, "int4") == 6
+    b = ops._pick_block_k(2 * 7919, 512, "int4")  # 2*prime: falls back to 2
+    assert b % 2 == 0 and (2 * 7919) % b == 0
+    with pytest.raises(ValueError):
+        ops._pick_block_k(9, 512, "int4")
+    assert ops._pick_block_k(9, 512, "dense") in (1, 3, 9)
+
+
+# ---------------------------------------------------------------------------
+# Sweep machinery
+# ---------------------------------------------------------------------------
+def test_candidate_configs_include_default():
+    cands, default = candidate_configs(64, 32, 64, "dense",
+                                       targets=(16, 32), block_m=8)
+    assert default in cands
+    for bm, bn, bk in cands:
+        assert 64 % bm == 0 and 64 % bn == 0 and 32 % bk == 0
+
+
+def test_sweep_winner_not_worse_than_default():
+    res = sweep_kernel("grouped_gemm", E=2, M=16, K=32, N=32, reps=1,
+                       block_m=8, targets=(16, 32), interpret=True)
+    assert res["winner"]["us"] <= res["default"]["us"]
+    assert any(r["is_default"] for r in res["records"])
+    assert res["key"].startswith("grouped_gemm|E2|K32|N32|M16|")
+
+
+def test_sweep_rejects_non_pallas_executor():
+    with pytest.raises(ValueError, match="pallas"):
+        sweep_kernel("grouped_gemm", E=2, M=16, K=32, N=32,
+                     executor="xla")
+
+
+def test_tune_moe_layer_fills_cache():
+    cache = TuneCache()
+    out = tune_moe_layer(E=2, top_k=1, d_model=32, d_ffn=32, tokens=8,
+                        reps=1, targets=(32,), cache=cache)
+    assert {r["kernel"] for r in out} == {"fused_gate_up", "grouped_gemm"}
+    assert set(cache.entries) == {r["key"] for r in out}
+    for rec in cache.entries.values():
+        assert rec["us"] <= rec["default_us"]

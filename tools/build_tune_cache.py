@@ -1,0 +1,87 @@
+"""Build the persistent kernel tune cache (DESIGN.md §12).
+
+Sweeps every grouped-GEMM shape the paper configs dispatch
+(``fused_gate_up`` at (d, f) and the down-projection ``grouped_gemm`` at
+(f, d)) over the candidate tile grid and writes the winners to
+``results/tuning/cache.json`` (override with ``--out`` /
+``$REPRO_TUNE_CACHE``).  The default config is always in the candidate
+set, so every written entry is measured >= the hard-coded default on the
+same microbenchmark.
+
+Off-TPU the Pallas kernels run interpreted: timings order the
+interpreter, not the MXU, so the tool refuses to write a cache unless
+``--force`` (CI smoke passes it; a real deployment builds on the TPU
+host).  ``--reduce`` shrinks shapes for smoke runs.
+
+Usage:
+    PYTHONPATH=src python tools/build_tune_cache.py [--reduce] [--force]
+        [--configs mixtral-8x7b ...] [--scheme dense|int8|int4]
+        [--tokens 256] [--reps 3] [--out results/tuning/cache.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.configs import PAPER_CONFIGS
+from repro.kernels import ops
+from repro.tuning import (TuneCache, local_cache_path, reset_cache,
+                          tune_moe_layer)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--configs", nargs="*", default=sorted(PAPER_CONFIGS),
+                    choices=sorted(PAPER_CONFIGS))
+    ap.add_argument("--tokens", type=int, default=256,
+                    help="routed tokens per sweep (M = bucket(tokens*k))")
+    ap.add_argument("--scheme", default="dense",
+                    choices=("dense", "int8", "int4"),
+                    help="kernel-level weight format to tune for")
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--reduce", action="store_true",
+                    help="shrink d/f (divide by 16) for smoke runs")
+    ap.add_argument("--force", action="store_true",
+                    help="write the cache even off-TPU (interpret-mode "
+                         "timings — CI smoke only)")
+    ap.add_argument("--out", default=None,
+                    help=f"cache path (default {local_cache_path()})")
+    args = ap.parse_args(argv)
+
+    if not ops.on_tpu() and not args.force:
+        print("refusing to build a tune cache off-TPU (interpret-mode "
+              "timings are not deployment-representative); pass --force "
+              "for a smoke build", file=sys.stderr)
+        return 2
+
+    out_path = args.out or local_cache_path()
+    cache = TuneCache.load(out_path) or TuneCache()
+    import jax
+    cache.device = jax.default_backend()
+    shrink = 16 if args.reduce else 1
+    for name in args.configs:
+        pc = PAPER_CONFIGS[name]
+        d = max(32, pc.d_model // shrink)
+        f = max(32, pc.d_ffn // shrink)
+        results = tune_moe_layer(
+            E=pc.n_experts, top_k=pc.top_k, d_model=d, d_ffn=f,
+            tokens=args.tokens, scheme=args.scheme, reps=args.reps,
+            cache=cache)
+        for res in results:
+            w, dflt = res["winner"], res["default"]
+            print(f"{name} {res['kernel']}: "
+                  f"default ({dflt['block_m']},{dflt['block_n']},"
+                  f"{dflt['block_k']}) {dflt['us']:.0f}us -> tuned "
+                  f"({w['block_m']},{w['block_n']},{w['block_k']}) "
+                  f"{w['us']:.0f}us [{res['key']}]")
+    cache.save(out_path)
+    reset_cache()        # next get_cache() in this process sees the file
+    print(f"wrote {len(cache.entries)} entries -> {out_path}")
+    print(json.dumps({"entries": len(cache.entries),
+                      "device": cache.device}, sort_keys=True))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
