@@ -35,6 +35,7 @@ from repro.execution import available_executors
 from repro.models import RunConfig, init_params
 from repro.serve.engine import ServeEngine
 from repro.serve.loadgen import PATTERNS, make_virtual_obs, replay, synth_trace
+from repro.spec import SpecEngine, make_draft_config
 
 STEP_TIME = 0.05        # virtual seconds per engine step
 RATE = 8.0              # offered load, requests per virtual second
@@ -53,8 +54,8 @@ TRACE_KW = {
 
 
 def run_cell(cfg, params, *, pattern: str, admission: str, executor: str,
-             n: int, seed: int, max_steps: int,
-             calibrate: bool = False) -> dict:
+             n: int, seed: int, max_steps: int, calibrate: bool = False,
+             spec_k: int = 0, draft=None) -> dict:
     trace = synth_trace(pattern, seed=seed, n=n, rate=RATE,
                         vocab=cfg.vocab_size, max_new=6,
                         slo_ttft=SLO_TTFT, slo_tpot=SLO_TPOT,
@@ -62,9 +63,17 @@ def run_cell(cfg, params, *, pattern: str, admission: str, executor: str,
     clock, obs = make_virtual_obs(enabled=True)
     rc = RunConfig(q_chunk=16, kv_chunk=16, executor=executor,
                    schedule_policy="dynamic", moe_stats=False)
-    eng = ServeEngine(cfg, params, slots=2, capacity=64, rc=rc,
-                      kv_block_size=4, prefill_chunk=4,
-                      admission=admission, obs=obs)
+    kw = dict(slots=2, capacity=64, rc=rc, kv_block_size=4,
+              prefill_chunk=4, admission=admission, obs=obs)
+    if spec_k > 0:
+        # speculative serving cell: engine.describe() records spec_k /
+        # spec_draft in the artifact config block, so goodput-under-SLO
+        # is comparable with and without speculation
+        dcfg, dparams = draft
+        eng = SpecEngine(cfg, params, draft_cfg=dcfg, draft_params=dparams,
+                         spec_k=spec_k, **kw)
+    else:
+        eng = ServeEngine(cfg, params, **kw)
     rec = replay(eng, trace, clock=clock,
                  step_time=None if calibrate else STEP_TIME, seed=seed,
                  pattern=pattern, max_steps=max_steps)
@@ -84,6 +93,11 @@ def main():
     ap.add_argument("--n", type=int, default=24,
                     help="requests per trace")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="run every cell on the speculative engine with "
+                         "this many draft tokens per round (0 = off); "
+                         "recorded in the artifact config block so "
+                         "goodput is comparable with/without speculation")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sweep for CI: burst pattern only, 12 "
                          "requests, no goodput-ordering assertion")
@@ -103,6 +117,10 @@ def main():
 
     cfg = reduced(get_config(args.arch))
     params = init_params(cfg, jax.random.key(0))
+    draft = None
+    if args.spec_k > 0:
+        dcfg = make_draft_config(cfg, reduce=True, layers=1, d_model=32)
+        draft = (dcfg, init_params(dcfg, jax.random.key(1)))
     print(f"# {args.arch} (reduced) — open-stream loadgen, "
           f"patterns={patterns} x admission=[fcfs, slo] "
           f"[executor={args.executor}, virtual step={STEP_TIME}s, "
@@ -117,7 +135,8 @@ def main():
                            admission=admission, executor=args.executor,
                            n=n, seed=args.seed,
                            max_steps=1024 if args.smoke else 4096,
-                           calibrate=args.calibrate)
+                           calibrate=args.calibrate,
+                           spec_k=args.spec_k, draft=draft)
             cells[admission] = rec
             records.append(rec)
         f, s = cells["fcfs"], cells["slo"]

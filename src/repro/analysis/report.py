@@ -172,6 +172,41 @@ def loadgen_table():
     return "\n".join(rows)
 
 
+def spec_table():
+    """Speculative-decoding sweep from benchmarks/spec_decode.py
+    (results/spec/*.json): acceptance rate and decode tokens per target
+    forward vs the k=0 baseline, per (sampling, k, draft) cell."""
+    spec_dir = ROOT / "results" / "spec"
+    cells = []
+    for p in sorted(spec_dir.glob("*.json")) if spec_dir.exists() else []:
+        try:
+            d = json.loads(p.read_text())
+        except (json.JSONDecodeError, UnicodeDecodeError):
+            continue
+        cells.extend((d.get("arch", "?"), r) for r in d.get("records") or [])
+    if not cells:
+        return ("_(no records — run ``PYTHONPATH=src python -m "
+                "benchmarks.spec_decode`` to populate results/spec/)_")
+    rows = ["| arch | sampling | k | draft | accept | tgt fwd | "
+            "tok/fwd | fwd win |",
+            "|" + "---|" * 8]
+    for arch, r in sorted(cells, key=lambda c: (c[0], c[1]["sampling"],
+                                                c[1]["spec_k"],
+                                                c[1].get("draft", ""))):
+        if r["spec_k"] == 0:
+            rows.append(f"| {arch} | {r['sampling']} | 0 | — | — | "
+                        f"{r['target_forwards']} | "
+                        f"{r['tokens_per_forward']:.2f} | baseline |")
+        else:
+            dname = "self" if r.get("draft_self") else r.get("draft", "?")
+            rows.append(f"| {arch} | {r['sampling']} | {r['spec_k']} | "
+                        f"{dname} | {r['acceptance_rate']:.2f} | "
+                        f"{r['target_forwards']} | "
+                        f"{r['tokens_per_forward']:.2f} | "
+                        f"{r.get('forward_reduction', 0):.2f}x |")
+    return "\n".join(rows)
+
+
 def tuning_table():
     """Kernel-autotuner sweep results from benchmarks/kernel_tune.py
     (results/tuning/kernel_tune*.json): per (paper config, kernel) cell,
@@ -250,6 +285,7 @@ def main():
         sched=scheduling_table(),
         serving=serving_table(),
         loadgen=loadgen_table(),
+        spec=spec_table(),
         tuning=tuning_table(),
         dryrun=dryrun_table(dr),
         roofline=markdown_table(sorted(
@@ -355,6 +391,19 @@ contiguous: resume re-prefills), but only while a feasible
 deadline-holder waits:
 
 {loadgen}
+
+## §Speculative decoding (beyond-paper; DESIGN.md §13)
+
+``SpecEngine`` drafts k tokens per slot with a cheap draft model (its
+own paged block pool) and verifies all n*(k+1) rows in ONE batched
+target forward — rejected tokens roll back as a host-side block-table
+truncation.  Greedy speculative output is token-identical to the
+non-speculative engine for ANY draft (asserted); the device-independent
+win metric is decode tokens per target forward (wall-clock tok/s is
+TPU-gated — CPU timings price the draft's interpreter overhead, not the
+forward it saves):
+
+{spec}
 
 ## §Kernel autotuning (beyond-paper; DESIGN.md §12)
 

@@ -70,10 +70,25 @@ def combine_scale_rows(sched: BlockSchedule, weights: jnp.ndarray):
 
 def plan_schedule(indices: jnp.ndarray, cfg) -> BlockSchedule:
     """The configured policy's schedule for this batch's routing.  Each
-    policy declares which config fields it consumes (scheduling/base.py)."""
+    policy declares which config fields it consumes (scheduling/base.py).
+
+    Under ``autotune=True`` a policy consuming ``block_m_min`` (the
+    dynamic policy's sub-block floor) gets it overridden by a swept
+    ``sub_block`` tune-cache record for this routing shape, when one
+    exists — the same trace-time consult idiom as the kernel tiles
+    (repro.tuning, DESIGN.md §12)."""
+    kw = policy_config_kwargs(cfg.schedule_policy, cfg)
+    if getattr(cfg, "autotune", False) and "block_m_min" in kw:
+        from repro.tuning import lookup_block_sizes
+        rec = lookup_block_sizes(
+            "sub_block", M=int(indices.shape[0]) * cfg.top_k,
+            K=cfg.block_m, N=0, E=cfg.n_experts,
+            executor=cfg.executor)
+        if rec is not None and "block_m_min" in rec:
+            kw["block_m_min"] = int(rec["block_m_min"])
     return build_schedule(
         indices, cfg.n_experts, cfg.block_m, policy=cfg.schedule_policy,
-        **policy_config_kwargs(cfg.schedule_policy, cfg))
+        **kw)
 
 
 # ----------------------------------------------------------------------

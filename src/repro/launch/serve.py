@@ -14,6 +14,7 @@ import argparse
 def main():
     from repro.execution import available_executors
     from repro.quantization import available_schemes, resolve_quant_cli
+    from repro.sampling import available_samplers
     from repro.scheduling import available_policies
     from repro.serve.admission import available_admission_policies
 
@@ -69,6 +70,29 @@ def main():
     ap.add_argument("--schedule-policy", default="dynamic",
                     choices=available_policies(),
                     help="MoE schedule policy (serving default: dynamic)")
+    ap.add_argument("--sampling", default="greedy",
+                    choices=available_samplers(),
+                    help="token selection (repro.sampling registry); "
+                         "greedy keeps the bitwise-exact argmax path, the "
+                         "stochastic methods draw keyed per-request "
+                         "streams on device (one host sync per step)")
+    ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k truncation for --sampling top_k (0 = off)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus mass for --sampling top_p (1.0 = off)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="engine-level sampling seed base; request i draws "
+                         "from stream seed+i (stochastic methods only)")
+    ap.add_argument("--spec-draft", default=None, metavar="ARCH",
+                    help="enable speculative decoding with this draft "
+                         "architecture (e.g. smollm-360m; reduced "
+                         "alongside --reduce, vocab aligned to the "
+                         "target); requires the paged engine")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft tokens proposed per slot per speculative "
+                         "round (target verifies k+1 positions in one "
+                         "forward)")
     ap.add_argument("--admission", default="fcfs",
                     choices=available_admission_policies(),
                     help="which pending request gets a freed slot "
@@ -128,9 +152,11 @@ def main():
     from repro.models import RunConfig, init_params
     from repro.obs import (NOOP, Observability, device_trace, drop_summary,
                            latency_summary)
+    from repro.sampling import SamplingConfig
     from repro.serve.engine import Request, ServeEngine
     from repro.serve.frontend import ServingFrontend
     from repro.serve.loadgen import make_virtual_obs, replay, synth_trace
+    from repro.spec import SpecEngine, make_draft_config
 
     cfg = get_config(args.arch)
     if args.reduce:
@@ -157,18 +183,37 @@ def main():
         obs = (Observability.memory()
                if (args.trace or args.metrics_out or args.device_trace)
                else NOOP)
-    engine = ServeEngine(cfg, params, slots=args.slots,
-                         capacity=args.capacity, admission=args.admission,
-                         kv_block_size=args.kv_block_size,
-                         prefix_cache=args.prefix_cache,
-                         prefill_chunk=args.prefill_chunk, obs=obs,
-                         rc=RunConfig(q_chunk=64, kv_chunk=64,
-                                      executor=args.executor,
-                                      schedule_policy=args.schedule_policy,
-                                      quant=quant if cfg.is_moe else "none",
-                                      moe_stats=bool(cfg.is_moe),
-                                      autotune=args.autotune,
-                                      paged_attn=args.paged_attn))
+    sampling = SamplingConfig(method=args.sampling,
+                              temperature=args.temperature,
+                              top_k=args.top_k, top_p=args.top_p,
+                              seed=args.seed)
+    kw = dict(slots=args.slots,
+              capacity=args.capacity, admission=args.admission,
+              kv_block_size=args.kv_block_size,
+              prefix_cache=args.prefix_cache,
+              prefill_chunk=args.prefill_chunk, obs=obs,
+              sampling=sampling,
+              rc=RunConfig(q_chunk=64, kv_chunk=64,
+                           executor=args.executor,
+                           schedule_policy=args.schedule_policy,
+                           quant=quant if cfg.is_moe else "none",
+                           moe_stats=bool(cfg.is_moe),
+                           autotune=args.autotune,
+                           paged_attn=args.paged_attn))
+    if args.spec_draft:
+        draft_cfg = get_config(args.spec_draft)
+        if args.reduce:
+            draft_cfg = reduced(draft_cfg)
+        draft_cfg = draft_cfg.replace(vocab_size=cfg.vocab_size)
+        draft_params = init_params(draft_cfg, jax.random.key(1))
+        engine = SpecEngine(cfg, params, draft_cfg=draft_cfg,
+                            draft_params=draft_params, spec_k=args.spec_k,
+                            **kw)
+        print(f"speculative decoding: draft {draft_cfg.name} proposes "
+              f"k={args.spec_k} tokens/slot/round; target verifies "
+              f"{args.spec_k + 1} positions per slot in one forward")
+    else:
+        engine = ServeEngine(cfg, params, **kw)
     if engine.paged:
         print(f"paged KV cache: {engine.kv.n_blocks} blocks x "
               f"{engine.kv.block_size} tokens, prefix cache "
@@ -245,6 +290,12 @@ def main():
                       f"{int(r.stats.get('serve/decode_batch', 1))} slot(s), "
                       f"summed over moe layers): {sched}")
     print(f"{len(done)}/{len(reqs)} requests completed")
+    if isinstance(engine, SpecEngine):
+        print(f"speculation: {engine.n_spec_rounds} rounds, "
+              f"{engine.n_accepted}/{engine.n_drafted} drafts accepted "
+              f"(rate {engine.acceptance_rate:.2f}); "
+              f"{engine.n_forwards} target + {engine.n_draft_forwards} "
+              f"draft forwards")
     # completion percentiles over COMPLETED requests only — censored
     # (dropped/preempted) stats are rolled up separately below
     lat = latency_summary([r for r in reqs if r.done])

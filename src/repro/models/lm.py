@@ -54,6 +54,11 @@ class RunConfig(NamedTuple):
     capacity_factor: float = 2.0     # EP buffer headroom
     schedule_policy: str = "fixed"   # fixed | capacity_factor | dynamic
                                      # (serving engine defaults to dynamic)
+    block_m_min: int = 8             # dynamic policy's sub-block floor
+                                     # (scheduling/dynamic.py sub_block);
+                                     # autotune=True lets a swept
+                                     # "sub_block" cache entry override it
+                                     # per shape (repro.tuning)
     quant: str = "none"              # expert-weight QuantScheme for serving
                                      # (repro.quantization registry; the
                                      # serve engine / launchers quantize
@@ -210,6 +215,7 @@ def _apply_moe_ffn(bp, x, cfg: ModelConfig, rc: RunConfig, mode: str):
                            fold_combine=rc.fold_combine,
                            schedule_policy=rc.schedule_policy,
                            capacity_factor=rc.capacity_factor,
+                           block_m_min=rc.block_m_min,
                            emit_stats=_moe_stats_active(rc),
                            autotune=rc.autotune)
     if rc.ep:

@@ -1,0 +1,167 @@
+"""Seeded sampling subsystem: logits processors + per-row device draws.
+
+Lifts the serve path's greedy-only restriction (DESIGN.md §13).  Mirrors
+the schedule-policy / executor / quant / admission registries: a *sampler*
+is a logits processor ``fn(logits, cfg) -> processed logits`` registered
+under a name the engine/launcher select by flag —
+
+* ``greedy``      — identity; the engine keeps the EXACT pre-sampling
+                    ``argmax`` path (decided at trace time), so greedy
+                    tokens stay bitwise-identical to every prior PR.
+* ``temperature`` — logits / T.
+* ``top_k``       — temperature scale, then all but the k largest logits
+                    masked to -inf.
+* ``top_p``       — temperature scale, then nucleus masking: the smallest
+                    set of tokens whose cumulative probability reaches p
+                    (the top-1 token is always kept).
+
+**Determinism.**  Stochastic draws are keyed, not stateful: the key for
+the draw that produces a request's output token ``i`` is
+
+    fold_in(fold_in(PRNGKey(seed), i), role)
+
+— a pure function of (per-request seed, output index, role).  Batched
+vs. unbatched runs, slot permutations, and preempt-resume replays
+therefore produce identical tokens *by construction* (no RNG state to
+keep in sync), which tests/test_sampling.py asserts against a per-request
+oracle.  ``role`` separates the independent streams one output index can
+consume (target sample / draft proposal / accept-u / residual resample —
+the speculative-decoding verify math, serve/step.py).
+
+Everything here runs INSIDE the jitted serving step on (T, V) row
+batches: per-row categorical draws keep the engine's one-host-sync-per-
+step invariant.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# key roles: the independent per-output-index draw streams
+ROLE_SAMPLE = 0        # target-distribution sample (also the spec bonus)
+ROLE_DRAFT = 1         # draft-model proposal (speculative decoding)
+ROLE_ACCEPT = 2        # rejection-sampling accept uniform
+ROLE_RESIDUAL = 3      # rejection-sampling residual resample
+
+
+class SamplingConfig(NamedTuple):
+    """Per-engine sampling configuration (per-request seeds ride on
+    ``Request.seed``; ``seed`` here is the engine-level base from which
+    seedless requests derive theirs)."""
+    method: str = "greedy"
+    temperature: float = 1.0
+    top_k: int = 0                 # 0 = no top-k truncation
+    top_p: float = 1.0             # 1.0 = no nucleus truncation
+    seed: int = 0
+
+
+Sampler = Callable[[jnp.ndarray, SamplingConfig], jnp.ndarray]
+
+_SAMPLERS: Dict[str, Sampler] = {}
+
+
+def register_sampler(name: str):
+    def deco(fn: Sampler) -> Sampler:
+        _SAMPLERS[name] = fn
+        return fn
+    return deco
+
+
+def get_sampler(name: str) -> Sampler:
+    if name not in _SAMPLERS:
+        raise ValueError(f"unknown sampling method {name!r}; "
+                         f"registered: {sorted(_SAMPLERS)}")
+    return _SAMPLERS[name]
+
+
+def available_samplers():
+    return sorted(_SAMPLERS)
+
+
+# ----------------------------------------------------------------------
+# Processors
+# ----------------------------------------------------------------------
+def _scale(logits: jnp.ndarray, cfg: SamplingConfig) -> jnp.ndarray:
+    t = max(float(cfg.temperature), 1e-6)
+    return logits if t == 1.0 else logits / t
+
+
+@register_sampler("greedy")
+def greedy(logits: jnp.ndarray, cfg: SamplingConfig) -> jnp.ndarray:
+    return logits
+
+
+@register_sampler("temperature")
+def temperature(logits: jnp.ndarray, cfg: SamplingConfig) -> jnp.ndarray:
+    return _scale(logits, cfg)
+
+
+@register_sampler("top_k")
+def top_k(logits: jnp.ndarray, cfg: SamplingConfig) -> jnp.ndarray:
+    logits = _scale(logits, cfg)
+    k = int(cfg.top_k)
+    if k <= 0 or k >= logits.shape[-1]:
+        return logits
+    kth = jnp.sort(logits, axis=-1)[..., -k][..., None]
+    return jnp.where(logits < kth, -jnp.inf, logits)
+
+
+@register_sampler("top_p")
+def top_p(logits: jnp.ndarray, cfg: SamplingConfig) -> jnp.ndarray:
+    logits = _scale(logits, cfg)
+    p = float(cfg.top_p)
+    if p >= 1.0:
+        return logits
+    srt = jnp.sort(logits, axis=-1)[..., ::-1]            # descending
+    probs = jax.nn.softmax(srt, axis=-1)
+    # exclusive cumulative mass: a token is kept while the mass BEFORE it
+    # is < p, so the top-1 token is always kept and the kept set is the
+    # smallest one reaching p
+    cum = jnp.cumsum(probs, axis=-1) - probs
+    thr = jnp.min(jnp.where(cum < p, srt, jnp.inf), axis=-1, keepdims=True)
+    return jnp.where(logits < thr, -jnp.inf, logits)
+
+
+def process_logits(logits: jnp.ndarray, cfg: SamplingConfig) -> jnp.ndarray:
+    """The configured method's processed logits (greedy: unchanged)."""
+    return get_sampler(cfg.method)(logits, cfg)
+
+
+# ----------------------------------------------------------------------
+# Keyed per-row draws (device-side; no host sync)
+# ----------------------------------------------------------------------
+def row_key(seed, counter, role: int):
+    """The draw key for one request's output index ``counter`` under
+    ``role`` — a pure function of its arguments (see module docstring)."""
+    k = jax.random.PRNGKey(seed)
+    k = jax.random.fold_in(k, counter)
+    return jax.random.fold_in(k, role)
+
+
+def sample_rows(logits: jnp.ndarray, cfg: SamplingConfig,
+                seeds: jnp.ndarray, counters: jnp.ndarray,
+                role: int = ROLE_SAMPLE) -> jnp.ndarray:
+    """One token per row of ``logits`` (T, V).  Greedy is EXACT argmax
+    (the pre-sampling path, chosen at trace time — ``seeds``/``counters``
+    are never touched); every other method draws a categorical from the
+    processed logits under the row's (seed, counter, role) key."""
+    if cfg.method == "greedy":
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    proc = process_logits(logits, cfg)
+    draw = jax.vmap(
+        lambda lg, s, c: jax.random.categorical(row_key(s, c, role), lg))
+    return draw(proc, seeds, counters).astype(jnp.int32)
+
+
+def uniform_rows(seeds: jnp.ndarray, counters: jnp.ndarray, k: int,
+                 role: int = ROLE_ACCEPT) -> jnp.ndarray:
+    """(T, k) uniforms: column i of row t uses key (seeds[t],
+    counters[t] + i, role) — the accept-u stream of speculative
+    verification, aligned with the output index each column decides."""
+    def one(s, c):
+        return jax.vmap(
+            lambda i: jax.random.uniform(row_key(s, c + i, role)))(
+                jnp.arange(k))
+    return jax.vmap(one)(seeds, counters)

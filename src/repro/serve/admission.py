@@ -116,24 +116,43 @@ def _ttft_feasible(engine, req, now: float) -> bool:
     return now + est <= submit + req.slo_ttft
 
 
+def _tpot_feasible(engine, req) -> bool:
+    """Can the engine's current decode pace meet ``req``'s TPOT budget?
+
+    One decode token costs one engine step, so the ``step_time_hint`` /
+    measured-EWMA estimate IS the expected TPOT — a request demanding a
+    faster pace than the engine delivers is infeasible at admit time, not
+    just at the post-hoc preemption check.  A 0.0 estimate (no step timed
+    yet, no hint) prices every budget as feasible."""
+    if req.slo_tpot is None:
+        return True
+    return engine.step_time_estimate() <= req.slo_tpot
+
+
 @register_admission("slo")
 def slo(pending: Sequence, *, engine=None) -> int:
-    """Earliest-feasible-TTFT-deadline first.
+    """Earliest-feasible-deadline first, pricing BOTH SLO families.
 
-    Rank groups: (0) deadline-holders that can still make it, by
-    deadline; (1) requests with no deadline, FCFS; (2) blown deadlines,
-    by deadline (work-conserving backfill).  Feasibility prices the
-    remaining prefill at the engine's measured (or hinted) step cost."""
+    Rank groups: (0) deadline-holders whose TTFT deadline is reachable
+    AND whose TPOT budget the engine's current pace can hold, by
+    deadline; (1) requests with no deadline, FCFS; (2) blown/hopeless
+    requests — TTFT unreachable or TPOT infeasible — by deadline
+    (work-conserving backfill: served only when nothing at-risk waits).
+    Feasibility prices remaining prefill steps and decode pace at the
+    engine's measured (or hinted) step cost."""
     if engine is None:
         return 0
     now = engine._clock()
 
     def key(i):
         r = pending[i]
-        if r.slo_ttft is None:
+        if r.slo_ttft is None and r.slo_tpot is None:
             return (1, 0.0, i)
-        deadline = engine._submit.get(r.rid, now) + r.slo_ttft
-        return (0 if _ttft_feasible(engine, r, now) else 2, deadline, i)
+        feasible = _ttft_feasible(engine, r, now) \
+            and _tpot_feasible(engine, r)
+        deadline = engine._submit.get(r.rid, now) + r.slo_ttft \
+            if r.slo_ttft is not None else now
+        return (0 if feasible else 2, deadline, i)
 
     return min(range(len(pending)), key=key)
 
@@ -150,8 +169,9 @@ def _slo_preempt(engine, pending: Sequence) -> List[int]:
         return []                      # a free slot exists: just admit
     now = engine._clock()
     demand = sum(1 for r in pending
-                 if r.slo_ttft is not None
-                 and _ttft_feasible(engine, r, now))
+                 if (r.slo_ttft is not None or r.slo_tpot is not None)
+                 and _ttft_feasible(engine, r, now)
+                 and _tpot_feasible(engine, r))
     if demand == 0:
         return []
     step_s = engine.step_time_estimate()

@@ -58,6 +58,7 @@ from repro.configs.base import ModelConfig
 from repro.execution.base import set_plan_hook
 from repro.models.lm import RunConfig, init_cache, swap_cache_slots
 from repro.obs import NOOP, RequestTimeline
+from repro.sampling import SamplingConfig
 from repro.serve.admission import get_admission
 from repro.serve.kv_cache import PagedKVCache, paged_supported
 from repro.serve.step import (make_paged_step, make_slot_decode_step,
@@ -80,6 +81,9 @@ class Request:
     # else ignores these fields.
     slo_ttft: Optional[float] = None
     slo_tpot: Optional[float] = None
+    # per-request sampling seed (repro.sampling); None derives a unique
+    # seed from the engine's SamplingConfig base + rid.  Greedy ignores it.
+    seed: Optional[int] = None
     # dispatch-plan telemetry, set at retirement from the request's final
     # step (router aux + sched/* ScheduleStats when the model is MoE and
     # stats are enabled), summed over the MoE layers of that step; the
@@ -97,8 +101,12 @@ class ServeEngine:
                  admission: str = "fcfs",
                  kv_block_size: Optional[int] = None,
                  prefix_cache: bool = True, prefill_chunk: int = 32,
-                 obs=None):
+                 obs=None, sampling: Optional[SamplingConfig] = None):
         self.cfg = cfg
+        # sampling config (repro.sampling); the greedy default keeps the
+        # literal argmax path inside the jitted steps, bitwise-identical
+        # to every prior PR
+        self.sampling = sampling or SamplingConfig()
         # observability bundle (repro.obs); the null default makes every
         # span/counter call a no-op — zero cost when off
         self.obs = obs or NOOP
@@ -164,13 +172,18 @@ class ServeEngine:
         # override via step_time_hint
         self.step_time_hint: Optional[float] = None
         self._ewma_step_s: Optional[float] = None
+        # target-model forwards executed (one per step that ran a forward;
+        # the speculative engine's benchmark compares this against the
+        # non-speculative baseline for its forward-count win)
+        self.n_forwards = 0
 
         if self.paged:
             self.kv = PagedKVCache(cfg, slots, capacity, kv_block_size,
                                    prefix_cache=prefix_cache)
             self.kv.bind_obs(self.obs.metrics, self.obs.tracer)
             self.cache = None
-            self._pstep = make_paged_step(cfg, self.rc, self.obs)
+            self._pstep = make_paged_step(cfg, self.rc, self.obs,
+                                          self.sampling)
             # prompt-prefill cursor: prompt tokens whose KV is written
             self._prefill_next = np.zeros(slots, np.int64)
             self._prefix_hit = np.zeros(slots, np.int64)
@@ -179,7 +192,8 @@ class ServeEngine:
             # ONE batched contiguous cache; slot s owns row s of every leaf
             self.kv = None
             self.cache = init_cache(cfg, slots, capacity)
-            self._prefill = make_slot_prefill_step(cfg, self.rc, self.obs)
+            self._prefill = make_slot_prefill_step(cfg, self.rc, self.obs,
+                                                   self.sampling)
             # one compiled decode step per distinct active count (<= slots)
             self._decode_steps: Dict[int, object] = {}
             self._swap = jax.jit(swap_cache_slots)
@@ -210,6 +224,14 @@ class ServeEngine:
                 (toks.shape[0], self.cfg.n_image_tokens, self.cfg.d_model),
                 jnp.float32)
         return b
+
+    def _req_seed(self, req: Request) -> int:
+        """The request's effective sampling seed: its own, or a unique
+        per-rid derivation from the engine base — so requests in one
+        batch draw independent streams by default (tests/test_sampling.py
+        asserts independence and batched-vs-unbatched identity)."""
+        return req.seed if req.seed is not None \
+            else self.sampling.seed + req.rid
 
     def admit(self, req: Request) -> bool:
         """Claim a free slot for ``req``; False if full.
@@ -299,7 +321,8 @@ class ServeEngine:
                                       prompt_tokens=len(seq)):
                 tok, self.cache, aux = self._prefill(
                     self.params, self.cache, self._batch(toks),
-                    jnp.int32(s))
+                    jnp.int32(s), jnp.int32(self._req_seed(req)))
+                self.n_forwards += 1
                 self.pos[s] = len(seq)
                 first = int(tok[0])             # forces the prefill sync
             self._last_aux[req.rid] = aux
@@ -381,10 +404,20 @@ class ServeEngine:
                     [(-1 if (k != "decode" or self.active[s].eos is None)
                       else self.active[s].eos)
                      for s, _, _, k in rows], jnp.int32)
+                # stochastic-draw keys: each row's (request seed, output
+                # index it produces).  Chunk rows' draws are discarded;
+                # keyed draws are stateless, so they disturb nothing.
+                seeds = jnp.asarray(
+                    [self._req_seed(self.active[s])
+                     for s, _, _, _ in rows], jnp.int32)
+                counters = jnp.asarray(
+                    [(len(self.active[s].out) if k == "decode" else 0)
+                     for s, _, _, k in rows], jnp.int32)
             with obs.tracer.span("serve/forward", tokens=len(rows)):
                 tok, eos_hit, self.kv.pools, aux = self._pstep(
                     self.params, self.kv.pools, self._batch(toks), pos,
-                    tables, eos)
+                    tables, eos, seeds, counters)
+                self.n_forwards += 1
             with obs.tracer.span("serve/host_sync"):   # the ONE host sync
                 tok_np, eos_np = jax.device_get((tok, eos_hit))
             # one stamp shared by every token this step produced (they
@@ -458,10 +491,16 @@ class ServeEngine:
                 fn = self._decode_steps.get(n)
                 if fn is None:
                     fn = self._decode_steps[n] = make_slot_decode_step(
-                        self.cfg, self.rc, n, self.obs)
+                        self.cfg, self.rc, n, self.obs, self.sampling)
+                seeds = jnp.asarray([self._req_seed(r) for r in reqs],
+                                    jnp.int32)
+                counters = jnp.asarray([len(r.out) for r in reqs],
+                                       jnp.int32)
             with obs.tracer.span("serve/forward", tokens=n):
                 tok, eos_hit, self.cache, aux = fn(
-                    self.params, self.cache, self._batch(last), pos, eos)
+                    self.params, self.cache, self._batch(last), pos, eos,
+                    seeds, counters)
+                self.n_forwards += 1
             with obs.tracer.span("serve/host_sync"):   # the ONE host sync
                 tok_np, eos_np = jax.device_get((tok, eos_hit))
             t_now = self._clock()
@@ -674,7 +713,10 @@ class ServeEngine:
              "quant": self.rc.quant, "kv_block_size": self.kv_block_size,
              "prefill_chunk": self.prefill_chunk if self.paged else 0,
              "paged_attn": self.rc.paged_attn,
-             "autotune": self.rc.autotune}
+             "autotune": self.rc.autotune,
+             "sampling": self.sampling.method,
+             "temperature": self.sampling.temperature,
+             "sampling_seed": self.sampling.seed}
         if seed is not None:
             d["seed"] = seed
         return d

@@ -51,10 +51,13 @@ class ServingFrontend:
                rid: Optional[int] = None,
                slo_ttft: Optional[float] = None,
                slo_tpot: Optional[float] = None,
+               seed: Optional[int] = None,
                on_token: Optional[TokenCallback] = None) -> Request:
         """Enter one request into the open queue; returns the Request as
         the caller's handle (poll ``.done`` / ``.out``, or stream via
-        ``on_token(req, tok)``).  The queue-wait clock starts HERE."""
+        ``on_token(req, tok)``).  The queue-wait clock starts HERE.
+        ``seed`` keys this request's stochastic sampling stream
+        (repro.sampling); None derives one from the engine base + rid."""
         if rid is None:
             rid = next(self._rids)
             while rid in self._inflight:
@@ -63,7 +66,7 @@ class ServingFrontend:
             raise ValueError(f"rid {rid} is already in flight")
         req = Request(rid=rid, prompt=np.asarray(prompt, np.int32),
                       max_new=max_new, eos=eos,
-                      slo_ttft=slo_ttft, slo_tpot=slo_tpot)
+                      slo_ttft=slo_ttft, slo_tpot=slo_tpot, seed=seed)
         self.engine.enqueue([req])     # stamps lat/queue_wait_s origin
         self.pending.append(req)
         self._inflight[rid] = req

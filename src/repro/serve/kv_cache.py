@@ -275,6 +275,51 @@ class PagedKVCache:
             i += 1
         self._chain[slot] = (i, digest)
 
+    def truncate_slot(self, slot: int, n_tokens: int) -> int:
+        """Roll ``slot``'s logical sequence back to its first ``n_tokens``
+        positions — the speculative-decoding rollback (DESIGN.md §13):
+        rejected draft tokens' KV lives in positions >= n_tokens, and
+        dropping it is pure host-side bookkeeping.
+
+        Whole blocks past ``ceil(n_tokens / block_size)`` are released
+        (refcount decrement; a refcount-0 block with a registered hash
+        parks in the LRU cached-free pool exactly like retirement).  The
+        kept tail block may still hold stale rows past ``n_tokens`` —
+        harmless: reads mask by each row's own kv_limit and the next
+        write at that position scatters over them in place.  Prefix-hash
+        registration past the truncation point is invalidated by
+        rewinding the slot's chain cursor (registered hashes only ever
+        cover full PROMPT blocks, which a speculative rollback never
+        cuts into — the defensive drop below covers direct callers).
+        Returns the number of blocks freed."""
+        keep = 0 if n_tokens <= 0 else min(-(-n_tokens // self.block_size),
+                                           self.blocks_per_slot)
+        na = int(self.n_alloc[slot])
+        if keep >= na:
+            return 0
+        for j in range(keep, na):
+            b = int(self.tables[slot, j])
+            self.refcount[b] -= 1
+            if self.refcount[b] == 0:
+                if b in self._block_hash:
+                    self._cached_free[b] = None
+                else:
+                    self.free.append(b)
+        self.tables[slot, keep:na] = 0
+        self.n_alloc[slot] = keep
+        ch = self._chain.get(slot)
+        if ch is not None and ch[0] > keep:
+            # the chain digest past ``keep`` covers tokens that no longer
+            # exist; it cannot be rewound (digests chain forward only) —
+            # stop registering for this slot rather than register stale
+            # content
+            del self._chain[slot]
+        freed = na - keep
+        self._metrics.inc("kv/blocks_truncated", freed)
+        self._tracer.instant("kv/truncate", slot=slot, n_tokens=n_tokens,
+                             freed=freed)
+        return freed
+
     # -- release / park / views ----------------------------------------
     def release_slot(self, slot: int) -> None:
         self._release_blocks(self.tables[slot], int(self.n_alloc[slot]))

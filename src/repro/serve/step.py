@@ -21,6 +21,20 @@ trace instants + a ``serve/recompiles`` counter.  It records host-static
 facts only (shapes) and inserts no ops into the traced computation:
 compiled artifacts and greedy tokens are bitwise-identical with
 observability on or off (tests/test_obs.py).
+
+Sampling (repro.sampling, DESIGN.md §13): the slot/paged constructors
+take a ``SamplingConfig``; stochastic methods replace the argmax with a
+per-row categorical draw keyed by (request seed, output index, role) —
+still on device, still ONE host sync per step.  ``method="greedy"``
+keeps the literal pre-sampling argmax path (a trace-time branch), so
+greedy tokens stay bitwise-identical.
+
+Speculative decoding (repro.spec): ``make_spec_draft_step`` chains k
+draft proposals with NO host sync between them, and
+``make_spec_verify_step`` scores all k+1 positions of every slot in ONE
+target forward (each MoE layer builds a single DispatchPlan covering
+them) and runs the accept/rejection math on device — the engine syncs
+once per speculative round.
 """
 from __future__ import annotations
 
@@ -31,6 +45,9 @@ from repro.configs.base import ModelConfig
 from repro.models.lm import (RunConfig, forward, slice_cache_slots,
                              update_cache_slots)
 from repro.obs import NOOP
+from repro.sampling import (ROLE_DRAFT, ROLE_RESIDUAL, ROLE_SAMPLE,
+                            SamplingConfig, process_logits, row_key,
+                            sample_rows, uniform_rows)
 
 
 def make_prefill_step(cfg: ModelConfig, rc: RunConfig):
@@ -61,7 +78,8 @@ def make_forward_only(cfg: ModelConfig, rc: RunConfig):
 # ----------------------------------------------------------------------
 # Slot steps over the batched serving cache
 # ----------------------------------------------------------------------
-def make_slot_prefill_step(cfg: ModelConfig, rc: RunConfig, obs=None):
+def make_slot_prefill_step(cfg: ModelConfig, rc: RunConfig, obs=None,
+                           sampling: SamplingConfig = None):
     """Prefill one request into slot row ``slot`` of the batched cache.
 
     Returns jitted ``(params, cache, batch, slot) -> (tok, cache', aux)``:
@@ -75,65 +93,208 @@ def make_slot_prefill_step(cfg: ModelConfig, rc: RunConfig, obs=None):
     position masking and would otherwise leak from the row's retired
     previous occupant into the new request."""
     obs = obs or NOOP
+    sampling = sampling or SamplingConfig()
 
-    def prefill_step(params, cache, batch, slot):
+    def prefill_step(params, cache, batch, slot, seed):
         obs.on_trace("prefill_step",
                      prompt_tokens=int(batch["tokens"].shape[-1]))
         sub = jax.tree.map(jnp.zeros_like, slice_cache_slots(cache, slot, 1))
         logits, new_sub, aux = forward(params, cfg, rc, batch,
                                        mode="prefill", cache=sub)
         cache = update_cache_slots(cache, new_sub, slot)
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)      # (1,)
+        if sampling.method == "greedy":
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (1,)
+        else:
+            # the prefill's logits seed output index 0
+            tok = sample_rows(logits, sampling, seed[None],
+                              jnp.zeros((1,), jnp.int32))
         return tok, cache, aux
     # donation (in-place cache update) is a TPU win but warns on CPU where
     # XLA can't alias the buffers; leave the flag off in this container
     return jax.jit(prefill_step)
 
 
-def make_paged_step(cfg: ModelConfig, rc: RunConfig, obs=None):
+def make_paged_step(cfg: ModelConfig, rc: RunConfig, obs=None,
+                    sampling: SamplingConfig = None):
     """ONE step function for the paged engine: decode tokens and prefill-
     chunk tokens ride in the SAME token batch, so every MoE layer builds a
     single DispatchPlan covering all of them.
 
-    Returns jitted ``(params, pools, batch, pos, tables, eos) -> (tok,
-    eos_hit, pools', aux)`` where each row of ``batch["tokens"]`` (T, 1) is
-    one token — a slot's decode token or one token of a prompt chunk —
-    with its own position ``pos[t]`` and its slot's block-table row
-    ``tables[t]``.  KV writes scatter block-granular into the pools; reads
-    gather each row's logical view (models/attention.py).  jit re-
+    Returns jitted ``(params, pools, batch, pos, tables, eos, seeds,
+    counters) -> (tok, eos_hit, pools', aux)`` where each row of
+    ``batch["tokens"]`` (T, 1) is one token — a slot's decode token or one
+    token of a prompt chunk — with its own position ``pos[t]`` and its
+    slot's block-table row ``tables[t]``.  KV writes scatter block-
+    granular into the pools; reads gather each row's logical view
+    (models/attention.py).  ``seeds``/``counters`` (T,) key stochastic
+    draws per row (repro.sampling); greedy never reads them.  jit re-
     specializes per distinct T (decode-only steps reuse T = n_active,
     bounded by slots; chunk steps add one shape per distinct chunk
     layout)."""
     obs = obs or NOOP
+    sampling = sampling or SamplingConfig()
 
-    def paged_step(params, pools, batch, pos, tables, eos):
+    def paged_step(params, pools, batch, pos, tables, eos, seeds, counters):
         obs.on_trace("paged_step", tokens=int(batch["tokens"].shape[0]))
         logits, pools, aux = forward(params, cfg, rc, batch, mode="decode",
                                      cache=pools, pos=pos,
                                      block_tables=tables)
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)     # (T,)
+        if sampling.method == "greedy":
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (T,)
+        else:
+            tok = sample_rows(logits, sampling, seeds, counters)
         return tok, tok == eos, pools, aux
     return jax.jit(paged_step)
 
 
 def make_slot_decode_step(cfg: ModelConfig, rc: RunConfig, n: int,
-                          obs=None):
+                          obs=None, sampling: SamplingConfig = None):
     """One decode step for the ``n`` active slots (prefix rows [0, n)).
 
-    Returns jitted ``(params, cache, batch, pos, eos) -> (tok, eos_hit,
-    cache', aux)`` where ``pos``/``eos`` are (n,) per-slot vectors (``eos``
-    -1 = no EOS token).  One forward covers all active slots — every MoE
-    layer plans/dispatches the n decode tokens together — and both the
-    argmax and the EOS comparison stay on device: the engine performs a
-    single host transfer per step."""
+    Returns jitted ``(params, cache, batch, pos, eos, seeds, counters) ->
+    (tok, eos_hit, cache', aux)`` where ``pos``/``eos``/``seeds``/
+    ``counters`` are (n,) per-slot vectors (``eos`` -1 = no EOS token).
+    One forward covers all active slots — every MoE layer plans/dispatches
+    the n decode tokens together — and the token selection (argmax or
+    keyed categorical) plus the EOS comparison stay on device: the engine
+    performs a single host transfer per step."""
     obs = obs or NOOP
+    sampling = sampling or SamplingConfig()
 
-    def decode_step(params, cache, batch, pos, eos):
+    def decode_step(params, cache, batch, pos, eos, seeds, counters):
         obs.on_trace("decode_step", active_slots=n)
         sub = slice_cache_slots(cache, 0, n)
         logits, new_sub, aux = forward(params, cfg, rc, batch,
                                        mode="decode", cache=sub, pos=pos)
         cache = update_cache_slots(cache, new_sub, 0)
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)      # (n,)
+        if sampling.method == "greedy":
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (n,)
+        else:
+            tok = sample_rows(logits, sampling, seeds, counters)
         return tok, tok == eos, cache, aux
     return jax.jit(decode_step)
+
+
+# ----------------------------------------------------------------------
+# Speculative decoding steps (repro.spec drives these)
+# ----------------------------------------------------------------------
+def make_spec_draft_step(cfg: ModelConfig, rc: RunConfig,
+                         sampling: SamplingConfig = None, obs=None):
+    """One draft-model proposal step over the paged draft pools.
+
+    Returns jitted ``(params, pools, batch, pos, tables, seeds, counters)
+    -> (tok, qdist, pools', aux)`` where ``tok`` (n,) is the proposal for
+    each slot and ``qdist`` (n, V) is the draft distribution q it was
+    drawn from (softmax of the processed logits — the verify step needs
+    q(draft_token) for rejection sampling).  Under greedy sampling the
+    proposal is the draft argmax and q degenerates to the same softmax
+    (the verify step's greedy path only compares token ids, never reads
+    q).  The engine chains k of these with NO host sync in between."""
+    obs = obs or NOOP
+    sampling = sampling or SamplingConfig()
+
+    def draft_step(params, pools, batch, pos, tables, seeds, counters):
+        obs.on_trace("spec_draft_step", tokens=int(batch["tokens"].shape[0]))
+        logits, pools, aux = forward(params, cfg, rc, batch, mode="decode",
+                                     cache=pools, pos=pos,
+                                     block_tables=tables)
+        proc = process_logits(logits, sampling)
+        qdist = jax.nn.softmax(proc, axis=-1)                    # (n, V)
+        if sampling.method == "greedy":
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (n,)
+        else:
+            tok = sample_rows(logits, sampling, seeds, counters,
+                              role=ROLE_DRAFT)
+        return tok, qdist, pools, aux
+    return jax.jit(draft_step)
+
+
+def make_spec_verify_step(cfg: ModelConfig, rc: RunConfig,
+                          sampling: SamplingConfig = None, k: int = 4,
+                          obs=None):
+    """Target-verify all k draft proposals of every slot in ONE forward.
+
+    Returns jitted ``(params, pools, batch, pos, tables, draft_tok,
+    draft_q, seeds, counters) -> (emitted, n_emit, pools', aux)``.  The
+    batch holds n·(k+1) rows — slot s contributes its last emitted token
+    plus its k proposals at positions [pos_s, pos_s + k], all sharing
+    slot s's block-table row — so every MoE layer builds a single
+    DispatchPlan covering the whole verify sweep (asserted in
+    tests/test_spec.py).  Row j's logits are the target distribution p
+    for output index counter_s + j.
+
+    Accept/rejection math (on device; ONE host sync returns ``emitted``
+    (n, k+1) + ``n_emit`` (n,)):
+
+    * greedy — integer comparison: accept_j = (draft_j == argmax p_j);
+      the accepted prefix length a is the run of leading accepts; the
+      bonus token is argmax p_a.  Token-identical to non-speculative
+      greedy by induction: each accepted/bonus token equals the argmax
+      the baseline engine would have produced at that output index.
+    * stochastic — standard rejection sampling: accept_j while
+      u_j · q_j(d_j) ≤ p_j(d_j) with u_j the ROLE_ACCEPT uniform for
+      output index counter_s + j; on first rejection resample from the
+      residual norm(max(p_a − q_a, 0)) (falling back to p_a when the
+      residual has no mass — q ≥ p everywhere); if all k accepted the
+      bonus is a ROLE_SAMPLE draw from p_k.
+
+    ``emitted[s]`` = the a accepted drafts then the bonus/residual token
+    then zero padding; ``n_emit[s]`` = a + 1.  The engine truncates both
+    KV pools back to the new length — rejected rows die as a host-side
+    block-table rollback."""
+    obs = obs or NOOP
+    sampling = sampling or SamplingConfig()
+
+    def verify_step(params, pools, batch, pos, tables, draft_tok, draft_q,
+                    seeds, counters):
+        n = draft_tok.shape[0]
+        obs.on_trace("spec_verify_step", tokens=int(batch["tokens"].shape[0]),
+                     k=k)
+        logits, pools, aux = forward(params, cfg, rc, batch, mode="decode",
+                                     cache=pools, pos=pos,
+                                     block_tables=tables)
+        L = logits.reshape(n, k + 1, -1)                   # (n, k+1, V)
+        if sampling.method == "greedy":
+            tgt = jnp.argmax(L, axis=-1).astype(jnp.int32)  # (n, k+1)
+            accept = (draft_tok == tgt[:, :k]).astype(jnp.int32)
+            a = jnp.sum(jnp.cumprod(accept, axis=1), axis=1)     # (n,)
+            bonus = jnp.take_along_axis(tgt, a[:, None], axis=1)[:, 0]
+        else:
+            proc = process_logits(L, sampling)
+            p = jax.nn.softmax(proc, axis=-1)               # (n, k+1, V)
+            u = uniform_rows(seeds, counters, k)            # (n, k)
+            p_d = jnp.take_along_axis(p[:, :k], draft_tok[..., None],
+                                      axis=-1)[..., 0]      # (n, k)
+            q_d = jnp.take_along_axis(draft_q, draft_tok[..., None],
+                                      axis=-1)[..., 0]      # (n, k)
+            accept = (u * q_d <= p_d).astype(jnp.int32)
+            a = jnp.sum(jnp.cumprod(accept, axis=1), axis=1)     # (n,)
+            p_a = jnp.take_along_axis(
+                p, a[:, None, None], axis=1)[:, 0]          # (n, V)
+            q_pad = jnp.concatenate(
+                [draft_q, jnp.zeros_like(draft_q[:, :1])], axis=1)
+            q_a = jnp.take_along_axis(
+                q_pad, a[:, None, None], axis=1)[:, 0]      # (n, V)
+            res = jnp.maximum(p_a - q_a, 0.0)
+            mass = jnp.sum(res, axis=-1, keepdims=True)
+            res = jnp.where(mass > 0.0, res / jnp.maximum(mass, 1e-20), p_a)
+            res_key = jax.vmap(
+                lambda s, c, aa: row_key(s, c + aa, ROLE_RESIDUAL))(
+                    seeds, counters, a)
+            tok_res = jax.vmap(
+                lambda kk, r: jax.random.categorical(kk, jnp.log(
+                    jnp.maximum(r, 1e-20))))(res_key, res).astype(jnp.int32)
+            bonus_key = jax.vmap(
+                lambda s, c: row_key(s, c + k, ROLE_SAMPLE))(seeds, counters)
+            bonus_full = jax.vmap(
+                lambda kk, pr: jax.random.categorical(kk, jnp.log(
+                    jnp.maximum(pr, 1e-20))))(
+                        bonus_key, p[:, k]).astype(jnp.int32)
+            bonus = jnp.where(a == k, bonus_full, tok_res)
+        dpad = jnp.concatenate(
+            [draft_tok, jnp.zeros_like(draft_tok[:, :1])], axis=1)
+        idx = jnp.arange(k + 1)[None, :]                    # (1, k+1)
+        emitted = jnp.where(idx < a[:, None], dpad,
+                            jnp.where(idx == a[:, None], bonus[:, None], 0))
+        return emitted, a + 1, pools, aux
+    return jax.jit(verify_step)

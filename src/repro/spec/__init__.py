@@ -1,0 +1,4 @@
+"""Speculative decoding on the paged serving engine (DESIGN.md §13)."""
+from repro.spec.engine import SpecEngine, make_draft_config
+
+__all__ = ["SpecEngine", "make_draft_config"]

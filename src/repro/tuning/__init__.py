@@ -9,10 +9,11 @@ from repro.tuning.cache import (CACHE_VERSION, TuneCache, get_cache,
                                 local_cache_path, lookup_block_sizes,
                                 make_key, reset_cache, shape_bucket)
 from repro.tuning.autotune import (bench, candidate_configs, sweep_kernel,
-                                   tune_moe_layer)
+                                   sweep_sub_block, tune_moe_layer)
 
 __all__ = [
     "CACHE_VERSION", "TuneCache", "get_cache", "local_cache_path",
     "lookup_block_sizes", "make_key", "reset_cache", "shape_bucket",
-    "bench", "candidate_configs", "sweep_kernel", "tune_moe_layer",
+    "bench", "candidate_configs", "sweep_kernel", "sweep_sub_block",
+    "tune_moe_layer",
 ]

@@ -145,6 +145,70 @@ def sweep_kernel(kernel: str, *, E: int, M: int, K: int, N: int,
             "records": records, "winner": winner, "default": default_rec}
 
 
+# candidate sub-block floors for the dynamic schedule policy sweep
+SUB_BLOCK_FLOORS = (8, 16, 32, 64)
+
+
+def sweep_sub_block(*, E: int, top_k: int, d_model: int, d_ffn: int,
+                    block_m: int, tokens: int = 256, dtype=jnp.float32,
+                    reps: int = 3, seed: int = 0, executor: str = "pallas",
+                    floors: Sequence[int] = SUB_BLOCK_FLOORS,
+                    interpret: Optional[bool] = None) -> dict:
+    """Sweep the dynamic policy's sub-block floor (``block_m_min`` —
+    scheduling/dynamic.py ``sub_block``) for one routing shape.
+
+    The physical effect of the floor is the grouped-GEMM grid granularity
+    ``q = sub_block(block_m, floor)``: finer q trims light-expert padding
+    but runs more, smaller grid steps.  The sweep times the down-proj
+    grouped GEMM over the layer's routed-row capacity at each distinct q
+    and records the winner under the ``sub_block`` kernel key
+    (``K`` = block_m, ``N`` = 0 — the schedule owns no output tile).  The
+    hard-coded default floor (8) is ALWAYS a candidate, so winner <=
+    default holds by construction — the same no-regression contract as
+    the tile sweeps.  ``plan_schedule`` consults the record at trace time
+    under ``autotune=True``."""
+    from repro.scheduling.dynamic import sub_block
+    from repro.tuning.cache import shape_bucket
+    if executor != "pallas":
+        raise ValueError(f"only the pallas executor runs on the schedule's "
+                         f"sub-block grid (got {executor!r})")
+    interp = ops._interp(interpret)
+    M = shape_bucket(tokens * top_k)
+    K, N = d_ffn, d_model                       # down-proj geometry
+    x, w, ws = _operands(E, M, K, N, "dense", dtype, seed)
+    bn = ops.pick_block(N, DEFAULT_BLOCK)
+    bk = ops._pick_block_k(K, DEFAULT_BLOCK, "dense")
+    # distinct effective grid granularities among the candidate floors
+    # (the default floor 8 is always a member)
+    qs: Dict[int, int] = {}
+    for floor in sorted(set(floors) | {8}):
+        if floor > block_m:
+            continue
+        q = sub_block(block_m, floor)
+        if M % q == 0:
+            qs.setdefault(q, floor)
+
+    records = []
+    for q, floor in sorted(qs.items()):
+        be, ba = _schedule(E, M, q)
+        fn = lambda: _gg.grouped_gemm(
+            x, w, be, ba, None, ws, block_m=q, block_n=bn, block_k=bk,
+            w_format="dense", interpret=interp)
+        sec = bench(fn, reps=reps)
+        records.append({"block_m_min": floor, "sub_block": q,
+                        "us": sec * 1e6, "tok_per_s": M / sec,
+                        "is_default": floor == 8})
+    winner = min(records, key=lambda r: r["us"])
+    default_rec = next(r for r in records if r["is_default"])
+    dt = jnp.dtype(dtype).name
+    return {"key": make_key("sub_block", M=tokens * top_k, K=block_m, N=0,
+                            E=E, dtype=dt, executor=executor),
+            "kernel": "sub_block", "executor": executor,
+            "shape": {"E": E, "M": M, "K": K, "N": N, "dtype": dt,
+                      "block_m": block_m},
+            "records": records, "winner": winner, "default": default_rec}
+
+
 # kernel -> (K, N) as a function of (d_model, d_ffn): the three grouped
 # GEMM shapes one MoE layer issues (gate+up fused, down projection, and
 # the unfused-ablation up/gate shape shares fused_gate_up's geometry)
@@ -159,9 +223,12 @@ def tune_moe_layer(*, E: int, top_k: int, d_model: int, d_ffn: int,
                    dtype=jnp.float32, reps: int = 3,
                    targets: Sequence[int] = DEFAULT_TARGETS,
                    cache: Optional[TuneCache] = None,
-                   seed: int = 0) -> List[dict]:
+                   seed: int = 0,
+                   block_m: Optional[int] = None) -> List[dict]:
     """Sweep every kernel shape one MoE layer dispatches at ~``tokens``
-    routed tokens, recording winners into ``cache`` when given."""
+    routed tokens, recording winners into ``cache`` when given.  With
+    ``block_m`` set, also sweeps the dynamic policy's sub-block floor at
+    this routing shape (the ``sub_block`` cache key)."""
     from repro.tuning.cache import shape_bucket
     M = shape_bucket(tokens * top_k)            # padded capacity bucket
     out = []
@@ -175,5 +242,16 @@ def tune_moe_layer(*, E: int, top_k: int, d_model: int, d_ffn: int,
             cache.put(res["key"], block_m=win["block_m"],
                       block_n=win["block_n"], block_k=win["block_k"],
                       us=win["us"], default_us=res["default"]["us"])
+        out.append(res)
+    if block_m is not None:
+        res = sweep_sub_block(E=E, top_k=top_k, d_model=d_model,
+                              d_ffn=d_ffn, block_m=block_m, tokens=tokens,
+                              dtype=dtype, reps=reps, seed=seed)
+        if cache is not None:
+            win = res["winner"]
+            cache.put(res["key"], block_m=win["sub_block"],
+                      block_n=0, block_k=0, us=win["us"],
+                      default_us=res["default"]["us"],
+                      block_m_min=win["block_m_min"])
         out.append(res)
     return out

@@ -104,13 +104,18 @@ class TuneCache:
 
     def put(self, key: str, *, block_m: int, block_n: int, block_k: int,
             us: Optional[float] = None, default_us: Optional[float] = None,
-            source: str = "swept") -> dict:
+            source: str = "swept", **extra) -> dict:
+        """``extra`` carries kernel-family-specific fields (e.g. the
+        ``sub_block`` family's ``block_m_min``) — additive: the record
+        schema stays a superset of the v1 contract, so no version bump."""
         rec = {"block_m": int(block_m), "block_n": int(block_n),
                "block_k": int(block_k), "source": source}
         if us is not None:
             rec["us"] = float(us)
         if default_us is not None:
             rec["default_us"] = float(default_us)
+        for k, v in extra.items():
+            rec[k] = int(v) if isinstance(v, (bool, int)) else v
         self.entries[key] = rec
         return rec
 

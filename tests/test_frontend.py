@@ -130,6 +130,43 @@ def test_slo_admission_orders_by_deadline_feasibility():
     assert pending[0].rid == 3
 
 
+def test_slo_admission_prices_tpot_feasibility():
+    """A request demanding a faster decode pace than the engine's current
+    step-time estimate is infeasible AT ADMIT TIME: it drops to the
+    backfill group behind feasible deadline-holders and no-deadline
+    traffic, instead of admitting first and being preempted later."""
+    cfg = dense_cfg()
+    params = init_params(cfg, jax.random.key(0))
+    eng, clock = virt_engine(cfg, params, slots=1, capacity=64,
+                             kv_block_size=4, prefill_chunk=4,
+                             admission="slo")
+    eng.step_time_hint = 0.05            # one decode token per 50ms step
+    prompt = np.arange(4, dtype=np.int32)
+    reqs = [Request(rid=0, prompt=prompt, max_new=2),            # no slo
+            Request(rid=1, prompt=prompt, max_new=2,
+                    slo_ttft=0.5, slo_tpot=0.01),   # pace unachievable
+            Request(rid=2, prompt=prompt, max_new=2,
+                    slo_ttft=0.5, slo_tpot=0.2)]    # pace achievable
+    pending = eng.enqueue(reqs)
+    policy = get_admission("slo")
+    # rid 1's TTFT is reachable but its TPOT budget (10ms/token) is below
+    # the engine's pace: the feasible competitor (rid 2) is admitted first
+    assert policy(pending, engine=eng) == 2
+    pending.pop(2)
+    # ... and even no-deadline traffic beats the TPOT-infeasible request
+    assert policy(pending, engine=eng) == 0
+    pending.pop(0)
+    assert policy(pending, engine=eng) == 0      # backfill runs last
+    assert pending[0].rid == 1
+    # a faster engine flips rid 1 back into the feasible group
+    eng.step_time_hint = 0.005
+    reqs2 = [Request(rid=3, prompt=prompt, max_new=2),
+             Request(rid=4, prompt=prompt, max_new=2,
+                     slo_ttft=0.5, slo_tpot=0.01)]
+    pending2 = eng.enqueue(reqs2)
+    assert policy(pending2, engine=eng) == 1
+
+
 def test_slo_preempts_hopeless_prefill_for_feasible_arrival():
     """An active long prefill whose TTFT deadline became unreachable is
     parked the moment a feasible deadline-holder waits — and both

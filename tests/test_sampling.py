@@ -1,0 +1,216 @@
+"""Seeded sampling (repro.sampling): processor semantics, keyed-draw
+determinism, and the engine-level identity bar — same per-request seed
+=> same tokens, regardless of batching, slot order, or neighbors
+(DESIGN.md §13, TESTING.md)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import RunConfig, init_params
+from repro.sampling import (ROLE_ACCEPT, ROLE_SAMPLE, SamplingConfig,
+                            available_samplers, get_sampler, process_logits,
+                            row_key, sample_rows, uniform_rows)
+from repro.serve.engine import Request, ServeEngine
+
+RC = RunConfig(q_chunk=16, kv_chunk=16)
+
+
+def dense_cfg(layers=1):
+    return reduced(get_config("smollm-360m"), layers=layers, d_model=32)
+
+
+# ---------------------------------------------------------------------------
+# Processors
+# ---------------------------------------------------------------------------
+def test_registry_contents():
+    assert {"greedy", "temperature", "top_k", "top_p"} \
+        <= set(available_samplers())
+    with pytest.raises(ValueError):
+        get_sampler("nope")
+
+
+def test_greedy_processor_is_identity():
+    lg = jnp.asarray([[0.3, -1.0, 2.0]])
+    out = process_logits(lg, SamplingConfig())
+    assert (out == lg).all()
+
+
+def test_temperature_scales_logits():
+    lg = jnp.asarray([[2.0, -4.0, 0.5]])
+    out = process_logits(lg, SamplingConfig(method="temperature",
+                                            temperature=0.5))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(lg) / 0.5,
+                               rtol=1e-6)
+
+
+def test_top_k_masks_all_but_k_largest():
+    lg = jnp.asarray([[1.0, 4.0, 2.0, 3.0, 0.0]])
+    out = np.asarray(process_logits(
+        lg, SamplingConfig(method="top_k", top_k=2)))
+    assert np.isfinite(out[0, [1, 3]]).all()      # the two largest survive
+    assert np.isneginf(out[0, [0, 2, 4]]).all()
+    # k >= V or k == 0 disable truncation
+    for k in (0, 5, 9):
+        out = np.asarray(process_logits(
+            lg, SamplingConfig(method="top_k", top_k=k)))
+        assert np.isfinite(out).all()
+
+
+def test_top_p_keeps_smallest_nucleus():
+    # softmax([3, 2, 0, -1]) ~ [.70, .26, .035, .013]: p=.8 needs top-2
+    lg = jnp.asarray([[3.0, 2.0, 0.0, -1.0]])
+    out = np.asarray(process_logits(
+        lg, SamplingConfig(method="top_p", top_p=0.8)))
+    assert np.isfinite(out[0, [0, 1]]).all()
+    assert np.isneginf(out[0, [2, 3]]).all()
+    # tiny p still keeps the top-1 token (never an all -inf row)
+    out = np.asarray(process_logits(
+        lg, SamplingConfig(method="top_p", top_p=1e-6)))
+    assert np.isfinite(out[0, 0]) and np.isneginf(out[0, 1:]).all()
+    # p = 1.0 disables truncation
+    out = np.asarray(process_logits(
+        lg, SamplingConfig(method="top_p", top_p=1.0)))
+    assert np.isfinite(out).all()
+
+
+# ---------------------------------------------------------------------------
+# Keyed draws
+# ---------------------------------------------------------------------------
+def test_greedy_sample_rows_is_exact_argmax():
+    lg = jax.random.normal(jax.random.key(0), (7, 33))
+    tok = sample_rows(lg, SamplingConfig(), jnp.zeros(7, jnp.int32),
+                      jnp.zeros(7, jnp.int32))
+    assert (np.asarray(tok) == np.asarray(jnp.argmax(lg, -1))).all()
+
+
+def test_sample_rows_batched_equals_per_row_oracle():
+    """The whole point of keyed draws: the token for (seed, counter) does
+    not depend on which rows share the batch, or in what order."""
+    cfg = SamplingConfig(method="temperature", temperature=0.7, seed=0)
+    lg = jax.random.normal(jax.random.key(1), (6, 64))
+    seeds = jnp.asarray([5, 5, 9, 9, 5, 2], jnp.int32)
+    counters = jnp.asarray([0, 1, 0, 1, 2, 0], jnp.int32)
+    batched = np.asarray(sample_rows(lg, cfg, seeds, counters))
+    solo = np.asarray([
+        sample_rows(lg[i:i + 1], cfg, seeds[i:i + 1], counters[i:i + 1])[0]
+        for i in range(6)])
+    assert (batched == solo).all()
+    # row permutation permutes tokens, nothing else
+    perm = np.asarray([3, 0, 5, 1, 4, 2])
+    permuted = np.asarray(sample_rows(lg[perm], cfg, seeds[perm],
+                                      counters[perm]))
+    assert (permuted == batched[perm]).all()
+
+
+def test_role_streams_are_independent():
+    k0 = row_key(3, 7, ROLE_SAMPLE)
+    k1 = row_key(3, 7, ROLE_ACCEPT)
+    assert not (np.asarray(k0) == np.asarray(k1)).all()
+
+
+def test_uniform_rows_columns_follow_counters():
+    """Column i of uniform_rows uses counter+i: shifting a row's counter
+    by one shifts its uniforms by one column."""
+    seeds = jnp.asarray([4, 4], jnp.int32)
+    u0 = np.asarray(uniform_rows(seeds, jnp.asarray([0, 3], jnp.int32), 4))
+    u1 = np.asarray(uniform_rows(seeds, jnp.asarray([1, 4], jnp.int32), 4))
+    np.testing.assert_array_equal(u0[:, 1:], u1[:, :-1])
+    assert ((0.0 <= u0) & (u0 < 1.0)).all()
+
+
+# ---------------------------------------------------------------------------
+# Engine-level determinism (the tentpole's correctness bar)
+# ---------------------------------------------------------------------------
+TEMP = SamplingConfig(method="temperature", temperature=0.8, seed=11)
+
+
+def _run(cfg, params, reqs, *, slots, sampling, **kw):
+    eng = ServeEngine(cfg, params, slots=slots, capacity=32, rc=RC,
+                      sampling=sampling, **kw)
+    eng.run(reqs, max_steps=256)
+    return {r.rid: list(r.out) for r in reqs}
+
+
+@pytest.mark.parametrize("kv_block_size", [4, 0])
+def test_batched_matches_unbatched_oracle(kv_block_size):
+    """Same per-request seed => same tokens whether the request decodes
+    alone or batched with neighbors (paged and contiguous engines)."""
+    cfg = dense_cfg()
+    params = init_params(cfg, jax.random.key(0))
+
+    def mk():
+        return [Request(rid=i, prompt=np.asarray([1 + i, 5, 9], np.int32),
+                        max_new=6, seed=100 + i) for i in range(3)]
+
+    solo = {}
+    for r in mk():
+        solo.update(_run(cfg, params, [r], slots=1, sampling=TEMP,
+                         kv_block_size=kv_block_size))
+    batched = _run(cfg, params, mk(), slots=2, sampling=TEMP,
+                   kv_block_size=kv_block_size)
+    assert batched == solo
+    assert any(len(t) == 6 for t in batched.values())
+
+
+def test_slot_permutation_identity():
+    """Submission order maps requests to different slots; per-request
+    outputs must not change."""
+    cfg = dense_cfg()
+    params = init_params(cfg, jax.random.key(0))
+
+    def mk(order):
+        reqs = [Request(rid=i, prompt=np.asarray([1 + i, 2, 7], np.int32),
+                        max_new=5, seed=50 + i) for i in range(3)]
+        return [reqs[i] for i in order]
+
+    fwd = _run(cfg, params, mk([0, 1, 2]), slots=2, sampling=TEMP)
+    rev = _run(cfg, params, mk([2, 1, 0]), slots=2, sampling=TEMP)
+    assert fwd == rev
+
+
+def test_per_request_seeds_are_independent():
+    """Identical prompts with different seeds draw from independent
+    streams; same seed reproduces exactly."""
+    cfg = dense_cfg()
+    params = init_params(cfg, jax.random.key(0))
+    prompt = np.asarray([3, 1, 4], np.int32)
+    a = Request(rid=0, prompt=prompt, max_new=8, seed=1)
+    b = Request(rid=1, prompt=prompt, max_new=8, seed=2)
+    c = Request(rid=2, prompt=prompt, max_new=8, seed=1)
+    out = _run(cfg, params, [a, b, c], slots=3, sampling=TEMP)
+    assert out[0] == out[2]            # same seed, same stream
+    assert out[0] != out[1]            # different seed, different stream
+
+
+def test_seedless_requests_derive_from_engine_base():
+    """Request.seed=None derives base+rid: reproducible across runs, and
+    changing the engine base seed changes the draws."""
+    cfg = dense_cfg()
+    params = init_params(cfg, jax.random.key(0))
+
+    def mk():
+        return [Request(rid=i, prompt=np.asarray([2, 6, 1], np.int32),
+                        max_new=6) for i in range(2)]
+
+    one = _run(cfg, params, mk(), slots=2, sampling=TEMP)
+    two = _run(cfg, params, mk(), slots=2, sampling=TEMP)
+    assert one == two
+    other = _run(cfg, params, mk(), slots=2,
+                 sampling=TEMP._replace(seed=99))
+    assert one != other
+
+
+def test_greedy_engine_ignores_seeds():
+    """Greedy stays the exact argmax path: seeds cannot perturb it."""
+    cfg = dense_cfg()
+    params = init_params(cfg, jax.random.key(0))
+
+    def mk(seed):
+        return [Request(rid=0, prompt=np.asarray([1, 5, 9, 2], np.int32),
+                        max_new=5, seed=seed)]
+
+    base = _run(cfg, params, mk(None), slots=1, sampling=SamplingConfig())
+    seeded = _run(cfg, params, mk(1234), slots=1, sampling=SamplingConfig())
+    assert base == seeded

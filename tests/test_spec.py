@@ -1,0 +1,245 @@
+"""Speculative decoding (repro.spec): greedy spec == non-spec baseline
+token for token regardless of draft quality, k, or page size; ONE
+DispatchPlan per MoE layer per verify step; host-side rollback via
+block-table truncation; stochastic reproducibility (DESIGN.md §13)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import RunConfig, init_params
+from repro.sampling import SamplingConfig
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.kv_cache import PagedKVCache
+from repro.spec import SpecEngine, make_draft_config
+
+RC = RunConfig(q_chunk=16, kv_chunk=16)
+
+
+def dense_cfg(layers=1):
+    return reduced(get_config("smollm-360m"), layers=layers, d_model=32)
+
+
+def moe_cfg(layers=2):
+    return reduced(get_config("moonshot-v1-16b-a3b"), layers=layers,
+                   d_model=64, vocab=256)
+
+
+def perturb(params, eps, seed=0):
+    """Slightly-wrong draft weights: agrees with the target on easy
+    tokens, diverges on close calls — fuzzes the rejection point."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    out = []
+    for i, leaf in enumerate(leaves):
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            k = jax.random.fold_in(jax.random.key(seed), i)
+            leaf = leaf + eps * jax.random.normal(k, leaf.shape, leaf.dtype)
+        out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def make_reqs(vocab, n=3, max_new=6, seed=0, **kw):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(1, vocab,
+                                        rng.integers(3, 9)).astype(np.int32),
+                    max_new=max_new, **kw) for i in range(n)]
+
+
+def run_engine(cfg, params, *, spec=None, k=2, kvbs=4, sampling=None,
+               reqs=None, slots=2):
+    sampling = sampling or SamplingConfig()
+    reqs = reqs if reqs is not None else make_reqs(cfg.vocab_size)
+    kw = dict(slots=slots, capacity=64, kv_block_size=kvbs,
+              prefill_chunk=4, rc=RC, sampling=sampling)
+    if spec is None:
+        eng = ServeEngine(cfg, params, **kw)
+    else:
+        dcfg, dparams = spec
+        eng = SpecEngine(cfg, params, draft_cfg=dcfg, draft_params=dparams,
+                         spec_k=k, **kw)
+    done = eng.run(reqs, max_steps=512)
+    assert len(done) == len(reqs)
+    return eng, {r.rid: list(r.out) for r in reqs}
+
+
+# ---------------------------------------------------------------------------
+# The correctness bar: greedy identity for ANY draft
+# ---------------------------------------------------------------------------
+# draft quality sweeps the acceptance spectrum: "self" accepts almost
+# everything, "random" almost nothing, "perturbed" rejects mid-chain —
+# together they fuzz every rollback point; identity must hold for all
+@pytest.mark.parametrize("kvbs,k,draft", [
+    (4, 1, "random"),
+    (4, 2, "perturbed"),
+    (4, 3, "self"),
+    (8, 2, "perturbed"),
+])
+def test_greedy_spec_identity_dense(kvbs, k, draft):
+    cfg = dense_cfg()
+    params = init_params(cfg, jax.random.key(0))
+    if draft == "self":
+        spec = (cfg, params)
+    elif draft == "perturbed":
+        spec = (cfg, perturb(params, 3e-2))
+    else:
+        dcfg = make_draft_config(cfg, reduce=True, layers=1, d_model=32)
+        spec = (dcfg, init_params(dcfg, jax.random.key(1)))
+    _, base = run_engine(cfg, params, kvbs=kvbs)
+    eng, out = run_engine(cfg, params, spec=spec, k=k, kvbs=kvbs)
+    assert out == base, f"spec k={k} kvbs={kvbs} draft={draft} diverged"
+    assert eng.n_spec_rounds > 0
+    assert eng.n_drafted >= eng.n_accepted >= 0
+    assert 0.0 <= eng.acceptance_rate <= 1.0
+
+
+def test_greedy_spec_identity_moe():
+    """Identity on the MoE target: the verify forward routes n*(k+1)
+    rows through the fused dispatch path."""
+    cfg = moe_cfg()
+    params = init_params(cfg, jax.random.key(0))
+    spec = (cfg, perturb(params, 3e-2))
+    _, base = run_engine(cfg, params)
+    eng, out = run_engine(cfg, params, spec=spec, k=2)
+    assert out == base
+    assert eng.n_spec_rounds > 0
+
+
+def test_spec_respects_eos_and_max_new():
+    """Tokens emitted past an accepted eos (or the max_new budget) inside
+    a round must be dropped exactly like the baseline drops them."""
+    cfg = dense_cfg()
+    params = init_params(cfg, jax.random.key(0))
+    # pick an eos that actually occurs: run once greedily, grab a token
+    probe = make_reqs(cfg.vocab_size, n=2, max_new=8)
+    run_engine(cfg, params, reqs=probe)
+    eos = probe[0].out[2]
+    for mk in (lambda: make_reqs(cfg.vocab_size, n=2, max_new=8, eos=eos),
+               lambda: make_reqs(cfg.vocab_size, n=2, max_new=3)):
+        _, base = run_engine(cfg, params, reqs=mk())
+        _, out = run_engine(cfg, params, spec=(cfg, params), k=3,
+                            reqs=mk())
+        assert out == base
+
+
+# ---------------------------------------------------------------------------
+# Plan discipline: the verify forward is ONE batched dispatch
+# ---------------------------------------------------------------------------
+def _count_plans(monkeypatch):
+    import repro.core.dispatch as dispatch_mod
+    calls = []
+    real = dispatch_mod.plan_dispatch
+
+    def counting(x, w_router, dcfg, **kw):
+        calls.append(int(x.shape[0]))
+        return real(x, w_router, dcfg, **kw)
+
+    monkeypatch.setattr(dispatch_mod, "plan_dispatch", counting)
+    return calls
+
+
+def test_one_plan_per_moe_layer_per_verify_step(monkeypatch):
+    """A spec round = k draft forwards (dense draft: no plans) + ONE
+    target verify forward building exactly one DispatchPlan per MoE
+    layer, covering all n*(k+1) verify rows.  (rc.unroll python-loops
+    the layer stack so traced plan calls are per-layer.)"""
+    cfg = moe_cfg(layers=3)                       # 1 dense prefix + 2 moe
+    params = init_params(cfg, jax.random.key(0))
+    dcfg = make_draft_config(cfg, reduce=True, layers=1, d_model=32)
+    dparams = init_params(dcfg, jax.random.key(1))
+    rc = RunConfig(q_chunk=16, kv_chunk=16, schedule_policy="dynamic",
+                   unroll=True)
+    k = 2
+    calls = _count_plans(monkeypatch)
+    eng = SpecEngine(cfg, params, draft_cfg=dcfg, draft_params=dparams,
+                     spec_k=k, slots=2, capacity=64, kv_block_size=4,
+                     prefill_chunk=8, rc=rc)
+    for i in range(2):
+        eng.admit(Request(rid=i, prompt=np.asarray([1 + i, 2, 3], np.int32),
+                          max_new=16))
+    n_moe_layers = cfg.n_layers - cfg.moe.first_dense_layers
+    first = True
+    for _ in range(8):
+        before = eng.n_spec_rounds
+        calls.clear()
+        eng.step()
+        if eng.n_spec_rounds == before:
+            continue                  # prefill / draft catch-up step
+        if first:                     # traces the verify forward once:
+            assert len(calls) == n_moe_layers, calls
+            assert all(t == 2 * (k + 1) for t in calls), calls
+            first = False
+        else:                         # compiled: no re-trace, ONE jit call
+            assert calls == [], calls
+    assert not first and eng.n_spec_rounds >= 2
+
+
+# ---------------------------------------------------------------------------
+# Rollback bookkeeping
+# ---------------------------------------------------------------------------
+def test_truncate_slot_releases_blocks():
+    cfg = dense_cfg()
+    kv = PagedKVCache(cfg, slots=2, capacity=32, block_size=4,
+                      prefix_cache=False)
+    kv.ensure_allocated(0, 10)                    # positions 0..10: 3 blocks
+    assert int(kv.n_alloc[0]) == 3
+    free_before = len(kv.free)
+    assert kv.truncate_slot(0, 5) == 1            # keep ceil(5/4) = 2
+    assert int(kv.n_alloc[0]) == 2
+    assert len(kv.free) == free_before + 1
+    assert kv.truncate_slot(0, 5) == 0            # idempotent at the cut
+    assert kv.truncate_slot(0, 0) == 2            # drop everything
+    assert int(kv.n_alloc[0]) == 0
+    # a later write re-allocates cleanly past the truncation
+    kv.ensure_allocated(0, 3)
+    assert int(kv.n_alloc[0]) == 1
+
+
+# ---------------------------------------------------------------------------
+# Stochastic speculation
+# ---------------------------------------------------------------------------
+def test_stochastic_spec_reproducible():
+    """Same seeds => same speculative stochastic outputs, run to run."""
+    cfg = dense_cfg()
+    params = init_params(cfg, jax.random.key(0))
+    spec = (cfg, perturb(params, 3e-2))
+    sampling = SamplingConfig(method="temperature", temperature=0.8, seed=3)
+    eng1, one = run_engine(cfg, params, spec=spec, k=2, sampling=sampling)
+    eng2, two = run_engine(cfg, params, spec=spec, k=2, sampling=sampling)
+    assert one == two
+    assert eng1.n_accepted == eng2.n_accepted
+    assert eng1.n_drafted >= eng1.n_accepted
+    assert eng1.n_spec_rounds > 0
+
+
+def test_stochastic_self_draft_accepts():
+    """Draft distribution == target distribution => rejection sampling
+    accepts with probability 1: every drafted token lands."""
+    cfg = dense_cfg()
+    params = init_params(cfg, jax.random.key(0))
+    sampling = SamplingConfig(method="temperature", temperature=0.8, seed=5)
+    eng, _ = run_engine(cfg, params, spec=(cfg, params), k=2,
+                        sampling=sampling)
+    assert eng.n_spec_rounds > 0
+    assert eng.acceptance_rate > 0.5, eng.acceptance_rate
+
+
+# ---------------------------------------------------------------------------
+# Construction validation
+# ---------------------------------------------------------------------------
+def test_spec_engine_validation():
+    cfg = dense_cfg()
+    params = init_params(cfg, jax.random.key(0))
+    bad_vocab = make_draft_config(cfg, reduce=True, layers=1, d_model=32)
+    bad_vocab = bad_vocab.replace(vocab_size=cfg.vocab_size + 1)
+    with pytest.raises(ValueError, match="vocab"):
+        SpecEngine(cfg, params, draft_cfg=bad_vocab,
+                   draft_params=params, slots=2, capacity=32,
+                   kv_block_size=4, rc=RC)
+    with pytest.raises(ValueError, match="paged"):
+        SpecEngine(cfg, params, draft_cfg=cfg, draft_params=params,
+                   slots=2, capacity=32, kv_block_size=0, rc=RC)
+    with pytest.raises(ValueError, match="spec_k"):
+        SpecEngine(cfg, params, draft_cfg=cfg, draft_params=params,
+                   spec_k=0, slots=2, capacity=32, kv_block_size=4, rc=RC)

@@ -217,3 +217,66 @@ def test_tune_moe_layer_fills_cache():
     assert set(cache.entries) == {r["key"] for r in out}
     for rec in cache.entries.values():
         assert rec["us"] <= rec["default_us"]
+
+
+# ---------------------------------------------------------------------------
+# Sub-block floor sweep (the dynamic policy's block_m_min, DESIGN.md §12)
+# ---------------------------------------------------------------------------
+from repro.tuning import sweep_sub_block  # noqa: E402
+
+
+def test_sweep_sub_block_no_regression():
+    res = sweep_sub_block(E=2, top_k=1, d_model=32, d_ffn=32, block_m=32,
+                          tokens=32, reps=1, interpret=True)
+    floors = [r["block_m_min"] for r in res["records"]]
+    assert 8 in floors                  # hard default is ALWAYS a candidate
+    assert sorted(r["sub_block"] for r in res["records"]) == [8, 16, 32]
+    assert res["winner"]["us"] <= res["default"]["us"]
+    assert res["default"]["sub_block"] == 8
+    # key schema: the schedule owns no output tile (N=0), K carries block_m
+    assert res["key"].startswith("sub_block|E2|K32|N0|M32|")
+
+
+def test_sweep_sub_block_rejects_non_pallas():
+    with pytest.raises(ValueError, match="pallas"):
+        sweep_sub_block(E=2, top_k=1, d_model=32, d_ffn=32, block_m=32,
+                        executor="xla")
+
+
+def test_tune_moe_layer_sweeps_sub_block():
+    cache = TuneCache()
+    out = tune_moe_layer(E=2, top_k=1, d_model=32, d_ffn=32, tokens=32,
+                         reps=1, targets=(32,), cache=cache, block_m=32)
+    assert {r["kernel"] for r in out} \
+        == {"fused_gate_up", "grouped_gemm", "sub_block"}
+    key = next(r["key"] for r in out if r["kernel"] == "sub_block")
+    rec = cache.lookup(key)
+    assert rec is not None and "block_m_min" in rec     # put(**extra) field
+    assert rec["us"] <= rec["default_us"]
+    # the record's tile IS the winning grid granularity
+    from repro.scheduling.dynamic import sub_block
+    assert rec["block_m"] == sub_block(32, rec["block_m_min"])
+
+
+def test_plan_schedule_consults_sub_block_record(env_cache):
+    """Trace-time consult: under autotune=True the dynamic policy's floor
+    comes from a swept sub_block record for this routing shape."""
+    from repro.core.dispatch import MoEDispatchConfig
+    from repro.execution.base import plan_schedule
+    cfg = MoEDispatchConfig(n_experts=2, top_k=1, block_m=32,
+                            executor="pallas", schedule_policy="dynamic",
+                            autotune=True)
+    idx = jnp.zeros((32, 1), jnp.int32)
+    assert int(plan_schedule(idx, cfg).block_m) == 8    # miss: default floor
+    c = TuneCache()
+    c.put(make_key("sub_block", M=32, K=32, N=0, E=2),
+          block_m=32, block_n=0, block_k=0, block_m_min=32)
+    c.save(env_cache)
+    reset_cache()
+    assert int(plan_schedule(idx, cfg).block_m) == 32   # hit: swept floor
+    # autotune=False keeps the config's own floor untouched
+    off = cfg._replace(autotune=False)
+    assert int(plan_schedule(idx, off).block_m) == 8
+    # an explicit config floor still applies on a cache miss
+    wide = cfg._replace(block_m_min=16, autotune=False)
+    assert int(plan_schedule(idx, wide).block_m) == 16
