@@ -269,6 +269,96 @@ def run_shared_prefix_sweep(cfg, params, *, executor: str, smoke: bool):
     return list(cells.values())
 
 
+# ----------------------------------------------------------------------
+# Expert-parallel scaling (padding-free a2a vs static layout + curves)
+# ----------------------------------------------------------------------
+def run_ep_scaling(*, smoke: bool, out_dir: pathlib.Path) -> None:
+    """EP dispatch scaling on a >1-device mesh + the a2a payload
+    accounting that motivates the padding-free send path.
+
+    Payload table (analytic, per source rank): the padding-free transport
+    commits ``ep * a2a_send_rows`` rows; the legacy static layout ships
+    ``E * expert_capacity`` rows no matter what routed where.  The
+    serving regime (many experts, modest per-rank token count — the
+    DeepSeek-style E=64 cell here) is where padding-free wins; the
+    acceptance bar (dynamic under zipf2.0 skew strictly below static) is
+    asserted, with the actually-USED rows under a zipf2.0 draw recorded
+    alongside.  Timed curves run the real sharded dispatch (and the
+    overlapped variant) at each mesh size the host exposes — launch under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` on CPU."""
+    from benchmarks.common import time_fn, zipf_assignments
+    from repro.compat import set_mesh
+    from repro.configs.base import MoEConfig
+    from repro.core import dispatch_config, init_moe_params
+    from repro.core.distributed import (a2a_send_rows, a2a_send_rows_static,
+                                        apply_moe_ep)
+
+    E, k, M, d, Tl, cf = 64, 2, 16, 32, 64, 2.0
+    eps = [1, 2, 4]
+    ndev = jax.local_device_count()
+
+    payload = []
+    static_rows = a2a_send_rows_static(Tl, k, E, M, cf)
+    _, idx = zipf_assignments(jax.random.key(7), Tl, k, E, 2.0)
+    for policy in ("fixed", "dynamic", "capacity_factor"):
+        for ep in eps:
+            C = a2a_send_rows(Tl, k, E, ep, M, cf, policy)
+            dest = np.asarray(idx).reshape(-1) // (E // ep)
+            used = int(np.bincount(dest, minlength=ep).max())
+            payload.append({
+                "policy": policy, "ep": ep, "skew": "zipf2.0",
+                "rows_padding_free": ep * C, "rows_static": static_rows,
+                "rows_used_max_dest": used,
+                "payload_ratio": ep * C / static_rows})
+    for rec in payload:
+        if rec["policy"] in ("dynamic", "capacity_factor"):
+            assert rec["rows_padding_free"] < rec["rows_static"], (
+                "padding-free a2a payload must undercut the static "
+                "layout in the many-expert serving regime", rec)
+    print(f"# payload (per-rank a2a rows, E={E} k={k} M={M} Tl={Tl}): "
+          f"static={static_rows}; padding-free "
+          + ", ".join(f"{r['policy']}@ep{r['ep']}={r['rows_padding_free']}"
+                      for r in payload if r["ep"] == max(eps)))
+
+    moe = MoEConfig(n_experts=E, top_k=k, d_ff_expert=32, block_m=M,
+                    capacity_factor=cf)
+    params = init_moe_params(jax.random.key(0), moe, d)
+    curves = []
+    steps = 2 if smoke else 8
+    for ep in [e for e in eps if e <= ndev]:
+        mesh = jax.make_mesh((ep,), ("model",))
+        T = Tl * ep                       # weak scaling: Tl fixed per rank
+        x = jax.random.normal(jax.random.key(1), (1, T, d))
+        for policy in ("dynamic", "capacity_factor"):
+            dcfg = dispatch_config(moe, executor="xla",
+                                   schedule_policy=policy)
+            for overlap in ((0, 2) if ep > 1 else (0,)):
+                with set_mesh(mesh):
+                    fn = jax.jit(lambda p, x, o=overlap, c=dcfg:
+                                 apply_moe_ep(p, x, c, overlap=o)[0])
+                    t = time_fn(fn, params, x, warmup=1, iters=steps)
+                tok_per_s = T / t
+                curves.append({
+                    "ep": ep, "policy": policy, "overlap": overlap,
+                    "tokens": T, "s_per_call": t, "tok_per_s": tok_per_s})
+                emit(f"ep_scaling/{policy}/ep{ep}"
+                     f"{'/overlap' if overlap else ''}", t,
+                     f"tok_per_s={tok_per_s:.1f}")
+    if ndev < max(eps):
+        print(f"# note: only {ndev} device(s) visible — curves above "
+              f"ep={ndev} skipped (force more with XLA_FLAGS)")
+
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path = out_dir / f"ep_scaling{'_smoke' if smoke else ''}.json"
+    out_path.write_text(json.dumps(
+        {"regime": {"n_experts": E, "top_k": k, "block_m": M,
+                    "tokens_per_rank": Tl, "capacity_factor": cf,
+                    "d_model": d},
+         "payload_rows": payload, "curves": curves,
+         "devices": ndev}, indent=1))
+    print(f"# wrote {out_path}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="moonshot-v1-16b-a3b")
@@ -292,7 +382,17 @@ def main():
                     help="tiny sweep for CI: slots 1,2 / 4 steps")
     ap.add_argument("--out", default="results/serve",
                     help="output dir for the JSON records")
+    ap.add_argument("--ep-scaling", action="store_true",
+                    help="run ONLY the expert-parallel scaling sweep "
+                         "(padding-free vs static a2a payload + dispatch "
+                         "curves on a >1-device mesh); CPU needs "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N")
     args = ap.parse_args()
+
+    if args.ep_scaling:
+        run_ep_scaling(smoke=args.smoke, out_dir=pathlib.Path(args.out))
+        return
 
     slot_counts = [int(s) for s in args.slots.split(",")]
     steps = args.steps

@@ -23,3 +23,45 @@ def make_debug_mesh(data: int = 2, model: int = 2, pod: int = 0):
     if pod:
         return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+# ----------------------------------------------------------------------
+# Multi-process (multi-host) launch
+# ----------------------------------------------------------------------
+def init_distributed(coordinator_address: str, num_processes: int,
+                     process_id: int) -> None:
+    """Join this process to a ``jax.distributed`` group.
+
+    After this returns, ``jax.devices()`` is the GLOBAL device list (all
+    hosts) while ``jax.local_devices()`` stays per-host — every mesh built
+    from the global list is a multi-host mesh and every collective in the
+    EP dispatch spans hosts.  Must run before any other jax call touches
+    the backend."""
+    jax.distributed.initialize(coordinator_address=coordinator_address,
+                               num_processes=num_processes,
+                               process_id=process_id)
+
+
+def multiprocess_compute_supported() -> bool:
+    """Whether the active backend can RUN multi-process computations.
+
+    ``jax.distributed.initialize`` succeeds on CPU (coordination service +
+    global device visibility work) but jit dispatch across processes does
+    not ("Multiprocess computations aren't implemented on the CPU
+    backend"), so CPU smoke launches must fall back to a single-process
+    forced-device-count mesh after the coordination handshake."""
+    return jax.default_backend() != "cpu" or jax.process_count() == 1
+
+
+def make_ep_mesh(ep: int | None = None, axis: str = "model"):
+    """1-D expert-parallel mesh over the global device list.
+
+    ``ep=None`` uses every visible device (multi-host when
+    ``init_distributed`` ran first).  The EP dispatch only needs the one
+    named axis; serving meshes that also batch-shard should build a 2-D
+    mesh via ``make_debug_mesh``/``make_production_mesh`` instead."""
+    n = len(jax.devices()) if ep is None else ep
+    if len(jax.devices()) % n:
+        raise ValueError(
+            f"ep={n} does not divide the {len(jax.devices())}-device mesh")
+    return jax.make_mesh((n,), (axis,))

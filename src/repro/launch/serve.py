@@ -141,9 +141,46 @@ def main():
                          "written to DIR (best-effort: degrades to a "
                          "warning when the profiler is unavailable)")
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--distributed", action="store_true",
+                    help="expert-parallel serving over every visible "
+                         "device: per-host admission queues feed ONE "
+                         "global decode step (serve/distributed.py). "
+                         "With --num-processes > 1 the processes join a "
+                         "jax.distributed group first (multi-host mesh)")
+    ap.add_argument("--coordinator", default="localhost:12355",
+                    help="jax.distributed coordinator address "
+                         "(process 0 binds it)")
+    ap.add_argument("--num-processes", type=int, default=1)
+    ap.add_argument("--process-id", type=int, default=0)
+    ap.add_argument("--hosts", type=int, default=None,
+                    help="admission host-queue count (default: "
+                         "num-processes)")
+    ap.add_argument("--ep-devices", type=int, default=None,
+                    help="devices on the EP mesh axis (default: all); "
+                         "single-process CPU runs force at least this "
+                         "many host devices")
+    ap.add_argument("--ep-overlap", action="store_true",
+                    help="software-pipeline the sharded EP dispatch "
+                         "(a2a of microbatch i+1 overlaps GEMMs of i)")
+    ap.add_argument("--ep-microbatches", type=int, default=2)
+    ap.add_argument("--ep-decode-layout", default="replicated",
+                    choices=("replicated", "sharded"),
+                    help="EP token layout for decode steps")
     args = ap.parse_args()
 
     import contextlib
+    import os
+
+    if args.distributed and args.num_processes == 1:
+        # single-process fallback (CPU smoke): the EP collectives still
+        # need >1 device, so force a multi-device host platform BEFORE
+        # jax initializes
+        n_dev = args.ep_devices or 2
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count="
+                f"{n_dev}").strip()
 
     import numpy as np
     import jax
@@ -163,6 +200,26 @@ def main():
         cfg = reduced(cfg)
     if not cfg.has_decode:
         raise SystemExit(f"{args.arch} is encoder-only: no decode path")
+
+    mesh_stack = contextlib.ExitStack()
+    if args.distributed:
+        from repro.compat import set_mesh
+        from repro.launch.mesh import (init_distributed, make_ep_mesh,
+                                       multiprocess_compute_supported)
+        if args.num_processes > 1:
+            init_distributed(args.coordinator, args.num_processes,
+                             args.process_id)
+            if not multiprocess_compute_supported():
+                raise SystemExit(
+                    "the active backend cannot run multi-process "
+                    "computations (CPU): re-launch single-process with "
+                    "--ep-devices N for a forced-host-device mesh")
+        mesh = make_ep_mesh(args.ep_devices, axis="model")
+        mesh_stack.enter_context(set_mesh(mesh))
+        print(f"distributed serving: {jax.process_count()} process(es), "
+              f"EP mesh {mesh.devices.shape} over axis 'model', "
+              f"decode layout {args.ep_decode_layout}, overlap "
+              f"{'on' if args.ep_overlap else 'off'}")
 
     params = init_params(cfg, jax.random.key(0))
     if args.ckpt_dir:
@@ -199,7 +256,11 @@ def main():
                            quant=quant if cfg.is_moe else "none",
                            moe_stats=bool(cfg.is_moe),
                            autotune=args.autotune,
-                           paged_attn=args.paged_attn))
+                           paged_attn=args.paged_attn,
+                           ep=bool(args.distributed and cfg.is_moe),
+                           ep_overlap=args.ep_overlap,
+                           ep_microbatches=args.ep_microbatches,
+                           ep_decode_layout=args.ep_decode_layout))
     if args.spec_draft:
         draft_cfg = get_config(args.spec_draft)
         if args.reduce:
@@ -277,6 +338,12 @@ def main():
             done = fe.drain(max_steps=args.max_steps)
             reqs = handles
             engine.dropped = [r for r in reqs if not r.done]
+        elif args.distributed:
+            from repro.serve.distributed import DistributedServeLoop
+            loop = DistributedServeLoop(
+                engine, n_hosts=args.hosts or max(1, args.num_processes),
+                admission=args.admission)
+            done = loop.run(reqs, max_steps=args.max_steps)
         else:
             done = engine.run(reqs, max_steps=args.max_steps)
     for r in reqs:

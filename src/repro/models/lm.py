@@ -79,6 +79,16 @@ class RunConfig(NamedTuple):
                                      #          paged-attention kernel
                                      # gather = gather_block_kv + flash
                                      #          (the differential oracle)
+    ep_overlap: bool = False         # software-pipeline the sharded EP
+                                     # dispatch: a2a of microbatch i+1 is
+                                     # issued before the expert GEMMs of i
+                                     # (X-MoE double buffering); False is
+                                     # bitwise the straight-line path
+    ep_microbatches: int = 2         # microbatch count when ep_overlap
+                                     # (clamped to a divisor of T_local)
+    ep_decode_layout: str = "replicated"  # EP token layout for decode
+                                     # steps: replicated (psum combine) or
+                                     # sharded (padding-free a2a)
 
 
 # ----------------------------------------------------------------------
@@ -201,12 +211,12 @@ def _attn_kw(cfg: ModelConfig, kind: str, rc: RunConfig):
 
 
 def _moe_stats_active(rc: RunConfig) -> bool:
-    """Plan telemetry flows only where a schedule exists: single-device
-    dispatch (EP plans skip schedule construction) on a schedule-consuming
-    executor (the dense oracle has none)."""
+    """Plan telemetry flows only where a schedule exists: a
+    schedule-consuming executor (the dense oracle has none).  EP paths now
+    emit the same ``sched/*`` keys (psum-replicated global totals) as
+    single-device dispatch."""
     from repro.execution import get_executor
-    return (rc.moe_stats and not rc.ep
-            and get_executor(rc.executor).needs_schedule)
+    return rc.moe_stats and get_executor(rc.executor).needs_schedule
 
 
 def _apply_moe_ffn(bp, x, cfg: ModelConfig, rc: RunConfig, mode: str):
@@ -220,10 +230,12 @@ def _apply_moe_ffn(bp, x, cfg: ModelConfig, rc: RunConfig, mode: str):
                            autotune=rc.autotune)
     if rc.ep:
         from repro.core.distributed import apply_moe_ep
-        layout = "replicated" if mode == "decode" else "sharded"
+        layout = rc.ep_decode_layout if mode == "decode" else "sharded"
         return apply_moe_ep(bp["moe"], x, dcfg, axis=rc.ep_axis,
                             capacity_factor=rc.capacity_factor,
-                            token_layout=layout)
+                            token_layout=layout,
+                            overlap=rc.ep_microbatches if rc.ep_overlap
+                            else 0)
     return apply_moe(bp["moe"], x, dcfg)
 
 

@@ -9,6 +9,8 @@ step.py      — jitted prefill/decode steps (single-sequence + slot-row)
 """
 from repro.serve.admission import (available_admission_policies,  # noqa: F401
                                    get_admission, register_admission)
+from repro.serve.distributed import (DistributedServeLoop,  # noqa: F401
+                                     partition_requests)
 from repro.serve.engine import Request, ServeEngine  # noqa: F401
 from repro.serve.frontend import ServingFrontend  # noqa: F401
 from repro.serve.loadgen import (PATTERNS, TraceEvent,  # noqa: F401

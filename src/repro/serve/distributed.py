@@ -1,0 +1,97 @@
+"""Multi-host serving: per-host admission feeding ONE global decode step.
+
+The SPMD serving pattern (X-MoE): every process runs the same host-side
+control flow over the same deterministic request partition, so the jitted
+global step — whose collectives (EP all_to_all, psum) span hosts — is
+entered by all processes in lockstep with identical slot assignments.
+Anything nondeterministic in admission would desynchronize the mesh, so
+this loop is built from deterministic pieces only:
+
+* ``partition_requests`` — stable round-robin assignment of requests to
+  host queues (by submission index, not hash seeds).
+* per-host admission — each host queue gets its OWN admission-policy
+  instance (the registered policies are pure functions of queue + engine
+  state, so every process computes the same choice for every host).
+* one global engine — ``DistributedServeLoop`` drains the host queues
+  round-robin into the single ``ServeEngine``'s free slots and drives its
+  step loop; the engine's decode step is the one global computation.
+
+On a real multi-host mesh each process feeds only tokens for its local
+shard, but the control flow here is identical; the CPU fallback (forced
+host device count, one process) runs the same code on a local mesh —
+``launch.mesh.multiprocess_compute_supported`` decides which one the
+launcher builds.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+from repro.serve.admission import get_admission
+from repro.serve.engine import Request, ServeEngine
+
+
+def partition_requests(requests: Sequence[Request],
+                       n_hosts: int) -> List[List[Request]]:
+    """Deterministic round-robin partition of ``requests`` into
+    ``n_hosts`` queues (submission order preserved inside each queue).
+    Every process must compute the SAME partition, so the rule is a pure
+    function of submission index — never of hash seeds or clocks."""
+    if n_hosts < 1:
+        raise ValueError(f"n_hosts must be >= 1, got {n_hosts}")
+    parts: List[List[Request]] = [[] for _ in range(n_hosts)]
+    for i, r in enumerate(requests):
+        parts[i % n_hosts].append(r)
+    return parts
+
+
+class DistributedServeLoop:
+    """Drive one global ``ServeEngine`` from per-host admission queues.
+
+    ``run`` mirrors ``ServeEngine.run``'s contract (returns completed
+    requests, strands the rest in ``engine.dropped``) but admission is
+    two-level: each host's queue is ordered by its own admission policy,
+    and free slots rotate across hosts round-robin so no host starves
+    even when another's queue is long.  With ``n_hosts=1`` this is
+    exactly the single-host engine loop."""
+
+    def __init__(self, engine: ServeEngine, *, n_hosts: int = 1,
+                 admission: str = "fcfs"):
+        self.engine = engine
+        self.n_hosts = n_hosts
+        self._admission = [get_admission(admission)
+                           for _ in range(n_hosts)]
+        self._rr = 0          # next host to offer a slot to
+
+    def schedule(self, queues: List[List[Request]]) -> None:
+        """Fill free engine slots, one per non-empty host queue in
+        round-robin order; each host's pick comes from ITS admission
+        policy over ITS queue."""
+        eng = self.engine
+        while eng.n_active < eng.slots and any(queues):
+            for _ in range(self.n_hosts):
+                h = self._rr % self.n_hosts
+                self._rr += 1
+                if queues[h]:
+                    pick = self._admission[h](queues[h], engine=eng)
+                    eng.admit(queues[h].pop(pick))
+                    break
+
+    def run(self, requests: Sequence[Request], max_steps: int = 512,
+            parts: Optional[List[List[Request]]] = None):
+        """Partition, admit per host, step the global engine to
+        completion (or the step budget).  ``parts`` overrides the default
+        round-robin partition (e.g. a locality-aware router)."""
+        eng = self.engine
+        if parts is None:
+            parts = partition_requests(requests, self.n_hosts)
+        queues = [eng.enqueue(p) for p in parts]
+        eng.dropped = []
+        for _ in range(max_steps):
+            self.schedule(queues)
+            if eng.step() == 0 and not any(queues):
+                break
+        eng.dropped = [r for r in requests if not r.done]
+        if eng.dropped:
+            eng.finalize_drops(eng.dropped)
+            eng.obs.metrics.inc("serve/dropped", len(eng.dropped))
+        return [r for r in requests if r.done]

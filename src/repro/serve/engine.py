@@ -568,6 +568,12 @@ class ServeEngine:
             # layers of the request's final step) as histogram samples
             m.observe_many("", {k: v for k, v in req.stats.items()
                                 if k.startswith("sched/")})
+            # under EP the skew table must stay honest: dropped-token
+            # totals from the sharded/replicated dispatch accumulate into
+            # a dedicated counter
+            if self.rc.ep and "sched/dropped_rows" in req.stats:
+                m.inc("serve/ep_dropped_tokens",
+                      int(req.stats["sched/dropped_rows"]))
 
     def _compact(self, s: int) -> None:
         """Vacate slot ``s`` keeping the active prefix contiguous (paged:

@@ -216,3 +216,75 @@ def test_fuzz_serving_paged_equals_contiguous(case):
                       prefix_cache=case["prefix_cache"])
     eng.run(paged_reqs)
     assert [r.out for r in paged_reqs] == [r.out for r in ref_reqs], case
+
+
+# ----------------------------------------------------------------------
+# Sharded EP vs single-device dispatch (policy x scheme x skew fuzz)
+# ----------------------------------------------------------------------
+def test_fuzz_sharded_ep_matches_single_device():
+    """Padding-free sharded EP == single-device dispatch over seeded
+    (policy x quant-scheme x router-skew) draws, including the drop
+    regime: the capacity_factor policy's drop SET must reproduce the
+    single-device first-come-first-kept order exactly, whatever dim the
+    tokens were split on.  One subprocess (8 forced host devices) loops
+    all draws; the cross-layout bound is the fp-reorder floor since both
+    sides run the identical (de)quantized weights."""
+    import pathlib
+    import subprocess
+    import sys
+
+    src = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+    code = """
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import apply_moe, dispatch_config, init_moe_params
+from repro.configs.base import MoEConfig
+from repro.core.distributed import apply_moe_ep
+from repro.launch.mesh import make_debug_mesh
+from repro.compat import set_mesh
+from repro.quantization import quantize_moe_params
+
+POLICIES = ("fixed", "dynamic", "capacity_factor")
+SCHEMES = ("none", "int8_expert", "int4_packed")
+ALPHAS = (0.0, 1.2, 2.0)     # router-skew: uniform .. zipf2.0 stress
+saw_drops = 0
+rng = np.random.default_rng(0)
+for draw in range(6):
+    pol = POLICIES[draw % 3]
+    sch = SCHEMES[int(rng.integers(3))]
+    alpha = ALPHAS[int(rng.integers(3))]
+    B, S, d = int(rng.integers(1, 5)), 32, 16
+    moe = MoEConfig(n_experts=8, top_k=2, d_ff_expert=32, block_m=8,
+                    capacity_factor=float(rng.choice([0.5, 1.0])))
+    params = init_moe_params(jax.random.key(draw), moe, d)
+    # zipf-scaled router columns concentrate routing mass on low experts
+    f = (np.arange(moe.n_experts) + 1.0) ** (-alpha)
+    params["router"] = params["router"] * jnp.asarray(
+        3.0 * f / f.mean(), params["router"].dtype)
+    if sch != "none":
+        params = quantize_moe_params(params, sch)
+    x = jax.random.normal(jax.random.key(100 + draw), (B, S, d))
+    # capacity semantics are per data shard -> data=1 for the drop cells
+    mesh = make_debug_mesh(data=1 if pol == "capacity_factor" else 2,
+                           model=4)
+    dcfg = dispatch_config(moe, executor="xla", schedule_policy=pol,
+                           emit_stats=True)
+    y_ref, aux_ref = apply_moe(params, x, dcfg)
+    with set_mesh(mesh):
+        y_ep, aux_ep = jax.jit(lambda p, x: apply_moe_ep(
+            p, x, dcfg))(params, x)
+    np.testing.assert_allclose(
+        np.asarray(y_ep), np.asarray(y_ref), rtol=5e-4, atol=5e-4,
+        err_msg=f"draw={draw} pol={pol} scheme={sch} alpha={alpha}")
+    assert float(aux_ep["sched/dropped_rows"]) \
+        == float(aux_ref["sched/dropped_rows"]), (draw, pol, sch, alpha)
+    saw_drops += float(aux_ref["sched/dropped_rows"]) > 0
+assert saw_drops > 0, "fuzz must exercise the drop regime at least once"
+print("OK drops_in", saw_drops, "draws")
+"""
+    env = {"XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+           "PYTHONPATH": src, "PATH": "/usr/bin:/bin",
+           "HOME": "/root", "JAX_PLATFORMS": "cpu"}
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=900)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    assert "OK" in r.stdout

@@ -56,7 +56,10 @@ mesh = make_debug_mesh(data=1, model=4)
 moe = MoEConfig(n_experts=4, top_k=1, d_ff_expert=16, block_m=8)
 params = init_moe_params(jax.random.key(0), moe, 8)
 x = jax.random.normal(jax.random.key(1), (1, 64, 8))
-dcfg = dispatch_config(moe, executor="xla")
+# drops belong to the capacity_factor POLICY now; fixed/dynamic never drop
+# under the padding-free sharded layout (they never dropped single-device)
+dcfg = dispatch_config(moe, executor="xla",
+                       schedule_policy="capacity_factor")
 with set_mesh(mesh):
     tight, _ = jax.jit(lambda p, x: apply_moe_ep(p, x, dcfg, capacity_factor=0.25))(params, x)
     loose, _ = jax.jit(lambda p, x: apply_moe_ep(p, x, dcfg, capacity_factor=8.0))(params, x)
@@ -257,3 +260,190 @@ ref = naive_attention(q, k, v, causal=False, kv_limit=pos)
 np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=3e-5, atol=3e-5)
 print("OK")
 """)
+
+
+# ----------------------------------------------------------------------
+# Padding-free sharded EP (ISSUE 10): policy-honoring dispatch
+# ----------------------------------------------------------------------
+def test_ep_sharded_policies_match_single_device_with_drops():
+    """Every schedule policy produces the SAME outputs, drop set, and
+    ScheduleStats under the padding-free sharded layout, the overlapped
+    variant, and the replicated layout as on a single device — including
+    the capacity_factor drop regime (cf=0.5 drops half the assignments).
+    fixed/dynamic use a token-sharded 2x4 mesh; the capacity cell uses
+    data=1 (capacity semantics are per data shard, matching GShard)."""
+    run_sub("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import apply_moe, dispatch_config, init_moe_params
+from repro.configs.base import MoEConfig
+from repro.core.distributed import apply_moe_ep
+from repro.launch.mesh import make_debug_mesh
+from repro.compat import set_mesh
+moe = MoEConfig(n_experts=8, top_k=2, d_ff_expert=32, block_m=8,
+                capacity_factor=0.5)
+params = init_moe_params(jax.random.key(0), moe, 16)
+x = jax.random.normal(jax.random.key(1), (4, 32, 16))
+for pol in ("fixed", "dynamic", "capacity_factor"):
+    mesh = make_debug_mesh(data=1 if pol == "capacity_factor" else 2,
+                           model=4)
+    dcfg = dispatch_config(moe, executor="xla", schedule_policy=pol,
+                           emit_stats=True)
+    y_ref, aux_ref = apply_moe(params, x, dcfg)
+    with set_mesh(mesh):
+        run = lambda **kw: jax.jit(lambda p, x: apply_moe_ep(
+            p, x, dcfg, **kw))(params, x)
+        y_sh, aux_sh = run()
+        y_ov, aux_ov = run(overlap=2)
+        y_rp, aux_rp = run(token_layout="replicated")
+    for tag, y in (("sharded", y_sh), ("overlap", y_ov),
+                   ("replicated", y_rp)):
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=5e-4, atol=5e-4,
+                                   err_msg=f"{tag} {pol}")
+    # stats parity: drops + useful rows are GLOBAL totals = single-device
+    for k in ("sched/dropped_rows", "sched/useful_rows"):
+        ref_v = float(aux_ref[k])
+        for tag, aux in (("sharded", aux_sh), ("overlap", aux_ov),
+                         ("replicated", aux_rp)):
+            assert float(aux[k]) == ref_v, (pol, tag, k, float(aux[k]),
+                                            ref_v)
+    if pol == "capacity_factor":
+        assert float(aux_sh["sched/dropped_rows"]) > 0, \
+            "cf=0.5 cell must exercise the drop regime"
+print("OK")
+""")
+
+
+def test_ep_overlap_token_identical_to_non_overlapped():
+    """The overlapped dispatch is token-identical to the non-overlapped
+    path on the same mesh (full-batch routing + drop decisions are made
+    BEFORE chunking), and overlap=0 goes down the literal n_micro=1
+    straight-line code path."""
+    run_sub("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import dispatch_config, init_moe_params
+from repro.configs.base import MoEConfig
+from repro.core.distributed import apply_moe_ep
+from repro.launch.mesh import make_debug_mesh
+from repro.compat import set_mesh
+mesh = make_debug_mesh(data=2, model=4)
+moe = MoEConfig(n_experts=8, top_k=2, d_ff_expert=32, block_m=8,
+                capacity_factor=0.5)
+params = init_moe_params(jax.random.key(0), moe, 16)
+x = jax.random.normal(jax.random.key(1), (4, 32, 16))
+for pol in ("fixed", "dynamic", "capacity_factor"):
+    dcfg = dispatch_config(moe, executor="xla", schedule_policy=pol)
+    with set_mesh(mesh):
+        y0, _ = jax.jit(lambda p, x: apply_moe_ep(p, x, dcfg))(params, x)
+        for n_micro in (2, 4):
+            y1, _ = jax.jit(lambda p, x, n=n_micro: apply_moe_ep(
+                p, x, dcfg, overlap=n))(params, x)
+            np.testing.assert_allclose(
+                np.asarray(y1), np.asarray(y0), rtol=1e-6, atol=1e-6,
+                err_msg=f"{pol} n_micro={n_micro}")
+print("OK")
+""")
+
+
+def test_ep_serve_engine_counts_dropped_tokens():
+    """EP serving surfaces dispatch drops: with moe_stats on, retired
+    requests carry the ``sched/*`` keys and the obs registry exposes the
+    ``serve/ep_dropped_tokens`` counter (satellite: the skew table stays
+    honest under EP)."""
+    run_sub("""
+import numpy as np, jax
+from repro.configs import get_config, reduced
+from repro.models import RunConfig
+from repro.obs import Observability
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.distributed import DistributedServeLoop
+from repro.launch.mesh import make_ep_mesh
+from repro.compat import set_mesh
+cfg = reduced(get_config("moonshot-v1-16b-a3b"))
+from repro.models import init_params
+params = init_params(cfg, jax.random.key(0))
+rc = RunConfig(q_chunk=64, kv_chunk=64, ep=True, moe_stats=True,
+               schedule_policy="capacity_factor", capacity_factor=0.5)
+obs = Observability.memory()
+with set_mesh(make_ep_mesh(2)):
+    eng = ServeEngine(cfg, params, slots=2, capacity=32, rc=rc, obs=obs)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, 5)
+                    .astype(np.int32), max_new=3) for i in range(3)]
+    done = DistributedServeLoop(eng, n_hosts=2).run(reqs, max_steps=64)
+assert len(done) == 3, [r.done for r in reqs]
+for r in done:
+    assert "sched/dropped_rows" in r.stats, sorted(r.stats)
+names = {c["name"] for c in obs.metrics.snapshot()["counters"]}
+assert "serve/ep_dropped_tokens" in names, sorted(names)
+print("OK")
+""")
+
+
+def test_distributed_serve_loop_matches_engine_run():
+    """Single-host sanity (no mesh): the per-host admission loop with
+    n_hosts=1 completes the same request set as ServeEngine.run, and the
+    round-robin partition is deterministic."""
+    import numpy as np
+
+    from repro.configs import get_config, reduced
+    from repro.models import RunConfig, init_params
+    from repro.serve.distributed import (DistributedServeLoop,
+                                         partition_requests)
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = reduced(get_config("moonshot-v1-16b-a3b"))
+    params = init_params(cfg, None or __import__("jax").random.key(0))
+    rng = np.random.default_rng(0)
+
+    def mk_reqs():
+        return [Request(rid=i, prompt=np.arange(3 + i % 2,
+                                                dtype=np.int32),
+                        max_new=3) for i in range(4)]
+
+    rc = RunConfig(q_chunk=64, kv_chunk=64)
+    ref = ServeEngine(cfg, params, slots=2, capacity=32, rc=rc) \
+        .run(mk_reqs(), max_steps=64)
+    reqs = mk_reqs()
+    eng = ServeEngine(cfg, params, slots=2, capacity=32, rc=rc)
+    done = DistributedServeLoop(eng, n_hosts=2).run(reqs, max_steps=64)
+    assert len(done) == len(ref) == 4
+    assert {r.rid: r.out for r in done} == {r.rid: r.out for r in ref}
+
+    parts = partition_requests(reqs, 3)
+    assert [len(p) for p in parts] == [2, 1, 1]
+    assert [r.rid for r in parts[0]] == [0, 3]
+    import pytest
+    with pytest.raises(ValueError):
+        partition_requests(reqs, 0)
+
+
+def test_static_schedule_alignment_guard():
+    """_static_schedule refuses unaligned capacities loudly instead of
+    silently misassigning block_expert (satellite bugfix)."""
+    from repro.core.distributed import _static_schedule
+
+    s = _static_schedule(32, 4, 8, 8)             # aligned: fine
+    assert int(s.capacity) == 32
+    with pytest.raises(ValueError, match="block_m-aligned"):
+        _static_schedule(36, 4, 8, 9)             # 9 % 8 != 0
+    with pytest.raises(ValueError, match="block_m-aligned"):
+        _static_schedule(34, 2, 8, 16)            # rows 34 % 8 != 0
+
+
+def test_capacity_factor_resolution_order():
+    """apply_moe_ep resolves capacity headroom as
+    ``explicit arg > cfg.capacity_factor`` — the ONE documented order
+    (satellite bugfix: removes the PR 1 'pass 2.0 explicitly' footgun)."""
+    from repro.configs.base import MoEConfig
+    from repro.core import dispatch_config
+    from repro.core.distributed import _resolve_capacity_factor
+
+    moe = MoEConfig(n_experts=8, top_k=2, d_ff_expert=32, block_m=8,
+                    capacity_factor=1.5)
+    cfg = dispatch_config(moe, executor="xla")
+    assert cfg.capacity_factor == 1.5             # defaulted from MoEConfig
+    assert _resolve_capacity_factor(cfg, None) == 1.5
+    assert _resolve_capacity_factor(cfg, 0.25) == 0.25
+    cfg2 = dispatch_config(moe, executor="xla", capacity_factor=3.0)
+    assert _resolve_capacity_factor(cfg2, None) == 3.0
